@@ -1,0 +1,76 @@
+"""Paper Tab. IV — normalized residuals per sync mode (ensemble over ranks).
+
+Reduced-scale loop-closure runs (CPU host): R ranks simulated with the vmap
+backend, identical arithmetic to the mesh backend (verified in tests).
+Modes: horovod baseline (allreduce), RMA-ARAR, ARAR (grouped), conventional
+ARAR, plus no-communication ensemble.
+
+The paper's numbers (8 GPUs, 100k epochs, residuals x1e-3):
+    hvd r0 = 95±53 ... vs RMA-ARAR 5±9, ARAR 3±14, conv ARAR 2±9
+i.e. ring modes converge ~10-30x closer than horovod at the same point.
+We check the same ORDERING at reduced scale.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import pipeline, workflow
+from repro.core.sync import SyncConfig
+from repro.core.workflow import WorkflowConfig
+from repro.core.residuals import normalized_residuals
+
+from .common import save_result
+
+MODES = {
+    "hvd": "allreduce",
+    "rma_arar": "rma_arar_arar",
+    "arar": "arar_arar",
+    "conv_arar": "conv_arar",
+    "ensemble": "ensemble",
+}
+
+
+def run(n_outer=2, n_inner=4, epochs=1500, h=50, n_param_samples=64,
+        events_per_sample=25, seed=0, data_events=50_000, quick=False):
+    if quick:
+        epochs, n_param_samples, events_per_sample = 150, 32, 10
+    data = pipeline.make_reference_data(jax.random.PRNGKey(99), data_events)
+    out = {}
+    for label, mode in MODES.items():
+        wcfg = WorkflowConfig(
+            sync=SyncConfig(mode=mode, h=h),
+            n_param_samples=n_param_samples,
+            events_per_sample=events_per_sample,
+            gen_lr=2e-4, disc_lr=5e-4)
+        state, hist = workflow.train_vmap(
+            jax.random.PRNGKey(seed), wcfg, n_outer, n_inner, epochs, data,
+            checkpoint_every=max(epochs // 20, 1))
+        # ensemble response over the rank generators (paper §VI-A)
+        noise = jax.random.normal(jax.random.PRNGKey(7), (256, 135))
+        from repro.core.ensemble import ensemble_response
+        p_hat, sigma = ensemble_response(state["gen"], noise)
+        res = np.asarray(normalized_residuals(p_hat))
+        out[label] = {
+            "residuals_x1e3": (res * 1e3).round(1).tolist(),
+            "sigma_x1e3": (np.asarray(sigma) * 1e3).round(1).tolist(),
+            "mean_abs_residual": float(np.abs(res).mean()),
+            "final_d_loss": float(np.asarray(hist["d_loss"][-1]).mean()),
+            "final_g_loss": float(np.asarray(hist["g_loss"][-1]).mean()),
+        }
+        print(f"  {label:10s} mean|r| = {out[label]['mean_abs_residual']:.4f} "
+              f"r(x1e3) = {out[label]['residuals_x1e3']}")
+    payload = {"epochs": epochs, "ranks": n_outer * n_inner, "h": h,
+               "modes": out}
+    save_result("convergence_modes" + ("_quick" if quick else ""), payload)
+    return payload
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--epochs", type=int, default=1500)
+    ap.add_argument("--quick", action="store_true")
+    a = ap.parse_args()
+    run(epochs=a.epochs, quick=a.quick)

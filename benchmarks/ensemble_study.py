@@ -1,0 +1,93 @@
+"""Paper Figs. 8–10 — ensemble bias/variance study.
+
+Fig. 8: models with more parameters + more data converge to smaller
+residuals with smaller spread.  Fig. 9/10: larger ensemble size M reduces
+RMSE and spread.  Reduced scale: 3 model sizes x 2 batch sizes, M <= 12,
+shortened epochs (single-GPU-per-GAN = 'ensemble' sync mode with R
+independent ranks, which IS the paper's ensemble protocol).
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import gan, pipeline, workflow
+from repro.core.ensemble import ensemble_response, stack_generators
+from repro.core.residuals import normalized_residuals
+from repro.core.sync import SyncConfig
+from repro.core.workflow import WorkflowConfig
+
+from .common import save_result
+
+# (label, generator hidden widths, param-samples) — "bigger model, more data"
+VARIANTS = [
+    ("small-13k", (64, 64, 64), 16),
+    ("mid-26k", (96, 96, 96), 32),
+    ("paper-51k", (128, 128, 128), 64),
+]
+
+
+def train_ensemble(key, widths, n_param_samples, M, epochs, data):
+    """M independent GANs (no communication) -> stacked generators."""
+    import repro.core.gan as gan_mod
+    orig = gan_mod.GEN_WIDTHS
+    gan_mod.GEN_WIDTHS = (gan_mod.NOISE_DIM,) + tuple(widths) + (gan_mod.N_PARAMS,)
+    try:
+        wcfg = WorkflowConfig(sync=SyncConfig(mode="ensemble"),
+                              n_param_samples=n_param_samples,
+                              events_per_sample=25,
+                              gen_lr=2e-4, disc_lr=5e-4)
+        state, _ = workflow.train_vmap(key, wcfg, 1, M, epochs, data)
+        return state["gen"]
+    finally:
+        gan_mod.GEN_WIDTHS = orig
+
+
+def run(M=8, epochs=800, quick=False, seed=0):
+    if quick:
+        M, epochs = 4, 100
+    data = pipeline.make_reference_data(jax.random.PRNGKey(99), 50_000)
+    noise = jax.random.normal(jax.random.PRNGKey(7), (256, gan.NOISE_DIM))
+    fig8 = {}
+    gens_by_variant = {}
+    for label, widths, nps in VARIANTS:
+        gens = train_ensemble(jax.random.PRNGKey(seed), widths, nps, M,
+                              epochs, data)
+        gens_by_variant[label] = gens
+        p_hat, sigma = ensemble_response(gens, noise)
+        res = np.asarray(normalized_residuals(p_hat))
+        fig8[label] = {"mean_abs_residual": float(np.abs(res).mean()),
+                       "mean_sigma": float(np.asarray(sigma).mean())}
+        print(f"  {label:10s} |r|={fig8[label]['mean_abs_residual']:.4f} "
+              f"sigma={fig8[label]['mean_sigma']:.4f}", flush=True)
+
+    # Fig. 9/10: subsample ensemble sizes m <= M from the largest variant
+    gens = gens_by_variant[VARIANTS[-1][0]]
+    fig10 = []
+    rng = np.random.RandomState(0)
+    for m in range(2, M + 1, 2):
+        rmses, sigmas = [], []
+        for _ in range(30):
+            idx = rng.choice(M, m, replace=False)
+            sub = jax.tree.map(lambda x: x[idx], gens)
+            p_hat, sigma = ensemble_response(sub, noise)
+            res = np.asarray(normalized_residuals(p_hat))
+            rmses.append(float(np.sqrt((res ** 2).mean())))
+            sigmas.append(float(np.asarray(sigma).mean()))
+        fig10.append({"M": m, "rmse_mean": float(np.mean(rmses)),
+                      "rmse_std": float(np.std(rmses)),
+                      "sigma_mean": float(np.mean(sigmas))})
+        print(f"  M={m:2d} rmse {np.mean(rmses):.4f}±{np.std(rmses):.4f} "
+              f"sigma {np.mean(sigmas):.4f}", flush=True)
+    payload = {"epochs": epochs, "M": M, "fig8": fig8, "fig10": fig10}
+    save_result("ensemble_study" + ("_quick" if quick else ""), payload)
+    return payload
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    a = ap.parse_args()
+    run(quick=a.quick)

@@ -1,0 +1,82 @@
+"""§Roofline aggregation — reads the dry-run JSON records and renders the
+per-(arch x shape x mesh) roofline table (markdown + CSV)."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+RESULTS = os.path.join(os.path.dirname(__file__), "results", "dryrun")
+
+COLS = ["arch", "shape", "mesh", "sync", "step", "variant", "compute_s",
+        "memory_s", "collective_s", "bottleneck", "useful_ratio",
+        "temp_GiB", "arg_GiB"]
+
+
+def load_records(pattern="*.json"):
+    recs = []
+    for path in sorted(glob.glob(os.path.join(RESULTS, pattern))):
+        with open(path) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def rows(recs):
+    out = []
+    for r in recs:
+        if r.get("status") != "ok":
+            out.append({"arch": r["arch"], "shape": r["shape"],
+                        "mesh": r["mesh"], "sync": r.get("sync", ""),
+                        "step": r.get("status"),
+                        "variant": r.get("reason", r.get("error", ""))[:60],
+                        "compute_s": None, "memory_s": None,
+                        "collective_s": None, "bottleneck": "",
+                        "useful_ratio": None, "temp_GiB": None,
+                        "arg_GiB": None})
+            continue
+        rf = r["roofline"]
+        out.append({
+            "arch": r["arch"], "shape": r["shape"], "mesh": r["mesh"],
+            "sync": r.get("sync", ""), "step": r["step"],
+            "variant": r.get("variant", ""),
+            "compute_s": rf["compute_s"], "memory_s": rf["memory_s"],
+            "collective_s": rf["collective_s"],
+            "bottleneck": rf["bottleneck"].replace("_s", ""),
+            "useful_ratio": rf["useful_ratio"],
+            "temp_GiB": r["memory"]["temp_bytes"] / 2 ** 30,
+            "arg_GiB": r["memory"]["argument_bytes"] / 2 ** 30,
+        })
+    return out
+
+
+def fmt(v):
+    if v is None:
+        return ""
+    if isinstance(v, float):
+        return f"{v:.3e}" if (abs(v) < 1e-2 or abs(v) >= 1e4) and v != 0 \
+            else f"{v:.3f}"
+    return str(v)
+
+
+def markdown_table(out_rows):
+    lines = ["| " + " | ".join(COLS) + " |",
+             "|" + "|".join(["---"] * len(COLS)) + "|"]
+    for r in out_rows:
+        lines.append("| " + " | ".join(fmt(r[c]) for c in COLS) + " |")
+    return "\n".join(lines)
+
+
+def main():
+    recs = load_records()
+    out_rows = rows(recs)
+    print(markdown_table(out_rows))
+    csv_path = os.path.join(os.path.dirname(RESULTS), "roofline.csv")
+    with open(csv_path, "w") as f:
+        f.write(",".join(COLS) + "\n")
+        for r in out_rows:
+            f.write(",".join(fmt(r[c]) for c in COLS) + "\n")
+    print(f"\nwrote {csv_path} ({len(out_rows)} rows)")
+
+
+if __name__ == "__main__":
+    main()

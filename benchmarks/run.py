@@ -1,0 +1,76 @@
+"""Benchmark harness entry point — one benchmark per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--full]
+
+Default (quick) mode keeps every benchmark CPU-budget friendly; --full runs
+the reduced-paper-scale versions used for EXPERIMENTS.md.  Output: one CSV
+line per benchmark: name,seconds,derived-headline.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated subset of benchmark names")
+    args = ap.parse_args()
+    quick = not args.full
+
+    from . import (convergence_modes, ensemble_study, h_scan,
+                   strong_scaling, weak_scaling)
+
+    benches = {
+        # paper Tab. IV
+        "convergence_modes": lambda: convergence_modes.run(quick=quick),
+        # paper Figs. 8-10
+        "ensemble_study": lambda: ensemble_study.run(quick=quick),
+        # paper Figs. 14-16
+        "strong_scaling": lambda: strong_scaling.run(quick=quick),
+        # paper Figs. 11-12
+        "weak_scaling": lambda: weak_scaling.run(quick=quick),
+        # paper §V-C h-frequency ablation
+        "h_scan": lambda: h_scan.run(quick=quick),
+    }
+    only = set(args.only.split(",")) if args.only else None
+
+    print("name,seconds,headline")
+    for name, fn in benches.items():
+        if only and name not in only:
+            continue
+        t0 = time.time()
+        payload = fn()
+        headline = _headline(name, payload)
+        print(f"{name},{time.time()-t0:.1f},{headline}", flush=True)
+
+
+def _headline(name: str, payload: dict) -> str:
+    if name == "convergence_modes":
+        m = payload["modes"]
+        return (f"|r| hvd={m['hvd']['mean_abs_residual']:.3f} "
+                f"rma={m['rma_arar']['mean_abs_residual']:.3f} "
+                f"arar={m['arar']['mean_abs_residual']:.3f}")
+    if name == "ensemble_study":
+        f10 = payload["fig10"]
+        return (f"rmse M={f10[0]['M']}:{f10[0]['rmse_mean']:.3f} -> "
+                f"M={f10[-1]['M']}:{f10[-1]['rmse_mean']:.3f}")
+    if name == "strong_scaling":
+        cs = payload["curves"]
+        return " ".join(f"R{k}:{v['mean_abs_residual'][-1]:.3f}"
+                        for k, v in cs.items())
+    if name == "weak_scaling":
+        m = payload["modes"]
+        last = {k: v[-1] for k, v in m.items()}
+        return " ".join(f"{k}:{v['analysis_rate']:.2e}ev/s"
+                        for k, v in last.items())
+    if name == "h_scan":
+        return " ".join(f"h{r['h']}:{r['mean_abs_residual']:.3f}"
+                        for r in payload["rows"])
+    return "ok"
+
+
+if __name__ == "__main__":
+    main()

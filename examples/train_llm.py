@@ -1,0 +1,48 @@
+"""Train an assigned architecture on synthetic data — framework route.
+
+By default trains the mamba2-130m config (the ~100M-class model of the
+assignment) for a few hundred steps on CPU with a short sequence length;
+any --arch works, with --smoke selecting the reduced variant.
+
+    PYTHONPATH=src python examples/train_llm.py --arch mamba2-130m \
+        --steps 200 --batch 8 --seq 256
+    PYTHONPATH=src python examples/train_llm.py --arch qwen3-32b --smoke
+"""
+import argparse
+
+import jax
+
+from repro.configs import ARCHS, get_config
+from repro.data import TokenStream
+from repro.training import TrainConfig, Trainer
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=sorted(ARCHS.keys()),
+                    default="mamba2-130m")
+    ap.add_argument("--smoke", action="store_true",
+                    help="use the reduced smoke variant of the arch")
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--microbatches", type=int, default=1)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch, smoke=args.smoke)
+    if not args.smoke and cfg.param_counts()["total"] > 1e9:
+        raise SystemExit(f"{args.arch} is too large for a CPU example; "
+                         "pass --smoke for the reduced variant")
+    tcfg = TrainConfig(lr=args.lr, warmup=20, total_steps=args.steps,
+                       microbatches=args.microbatches)
+    print(f"training {cfg.name} ({cfg.param_counts()['total']/1e6:.1f}M "
+          f"params) for {args.steps} steps @ batch {args.batch} x seq {args.seq}")
+
+    trainer = Trainer(cfg, tcfg, jax.random.PRNGKey(0))
+    stream = TokenStream(cfg, args.batch, args.seq)
+    trainer.run(stream, args.steps, log_every=max(args.steps // 20, 1))
+
+
+if __name__ == "__main__":
+    main()

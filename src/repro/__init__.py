@@ -1,0 +1,17 @@
+"""repro — SAGIPS (Scalable Asynchronous Generative Inverse Problem Solver)
+reproduced and generalized as a JAX/TPU distributed-training framework.
+
+Subpackages:
+    core        the paper's contribution (ARAR/RMA gradient sync, GAN workflow)
+    models      architecture zoo (dense GQA / MoE / Mamba-2 / hybrid / audio / vlm)
+    parallel    mesh + logical-axis sharding rules
+    optim       optimizers & schedules (from scratch)
+    data        synthetic data pipelines
+    training    train-step factory with pluggable gradient sync
+    serving     prefill / decode with KV & SSM caches
+    checkpoint  sharded save/restore
+    kernels     Pallas TPU kernels (flash attention, SSD scan, inverse-CDF)
+    configs     assigned architecture configs + input shapes
+    launch      production mesh, dry-run, train/serve entry points
+"""
+__version__ = "1.0.0"

@@ -1,0 +1,84 @@
+"""Checkpointing: pytree -> npz with path-flattened keys + json metadata.
+
+Works with sharded arrays (device_get gathers); restore re-places onto the
+provided shardings.  Directory layout:
+
+    <dir>/step_<n>/arrays.npz
+    <dir>/step_<n>/meta.json
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+_SEP = "/"
+
+
+def _flatten(tree):
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = _SEP.join(str(getattr(p, "key", getattr(p, "idx", p)))
+                        for p in path)
+        flat[key] = leaf
+    return flat
+
+
+def save_checkpoint(directory: str, step: int, tree, metadata: Optional[dict] = None):
+    path = os.path.join(directory, f"step_{step:08d}")
+    os.makedirs(path, exist_ok=True)
+    flat = _flatten(tree)
+    arrays = {k: np.asarray(jax.device_get(v)) for k, v in flat.items()}
+    dtypes = {k: str(v.dtype) for k, v in arrays.items()}
+    # npz cannot hold bfloat16 — store a uint16 view, restore via dtypes meta
+    stored = {k: (v.view(np.uint16) if dtypes[k] == "bfloat16" else v)
+              for k, v in arrays.items()}
+    np.savez(os.path.join(path, "arrays.npz"), **stored)
+    meta = {"step": step, "keys": sorted(arrays.keys()), "dtypes": dtypes}
+    if metadata:
+        meta["user"] = metadata
+    with open(os.path.join(path, "meta.json"), "w") as f:
+        json.dump(meta, f, indent=1)
+    return path
+
+
+def latest_step(directory: str) -> Optional[int]:
+    if not os.path.isdir(directory):
+        return None
+    steps = [int(m.group(1)) for d in os.listdir(directory)
+             if (m := re.fullmatch(r"step_(\d+)", d))]
+    return max(steps) if steps else None
+
+
+def restore_checkpoint(directory: str, step: int, like_tree, shardings=None):
+    """Restore into the structure of `like_tree` (values replaced)."""
+    import ml_dtypes
+    path = os.path.join(directory, f"step_{step:08d}")
+    data = np.load(os.path.join(path, "arrays.npz"))
+    with open(os.path.join(path, "meta.json")) as f:
+        meta = json.load(f)
+    flat_like = _flatten(like_tree)
+    missing = set(flat_like) - set(data.files)
+    if missing:
+        raise KeyError(f"checkpoint missing keys: {sorted(missing)[:5]} ...")
+
+    def load(k):
+        raw = data[k]
+        if meta["dtypes"].get(k) == "bfloat16":
+            raw = raw.view(ml_dtypes.bfloat16)
+        return jnp.asarray(raw)
+
+    restored_flat = {k: load(k) for k in flat_like}
+    leaves_like, treedef = jax.tree_util.tree_flatten(like_tree)
+    # rebuild in like_tree leaf order
+    keys_in_order = list(_flatten(like_tree).keys())
+    leaves = [restored_flat[k] for k in keys_in_order]
+    tree = jax.tree_util.tree_unflatten(treedef, leaves)
+    if shardings is not None:
+        tree = jax.device_put(tree, shardings)
+    return tree

@@ -1,0 +1,27 @@
+"""Architecture registry: --arch <id> resolves here."""
+from . import (mamba2_130m, qwen3_32b, qwen2_5_3b, hubert_xlarge,
+               qwen2_moe_a2_7b, deepseek_67b, internvl2_1b, granite_moe_3b,
+               jamba_1_5_large, tinyllama_1_1b, sagips_gan)
+from .shapes import SHAPES, InputShape, Plan, plan_for, SWA_WINDOW
+
+ARCHS = {
+    "mamba2-130m": mamba2_130m,
+    "qwen3-32b": qwen3_32b,
+    "qwen2.5-3b": qwen2_5_3b,
+    "hubert-xlarge": hubert_xlarge,
+    "qwen2-moe-a2.7b": qwen2_moe_a2_7b,
+    "deepseek-67b": deepseek_67b,
+    "internvl2-1b": internvl2_1b,
+    "granite-moe-3b-a800m": granite_moe_3b,
+    "jamba-1.5-large-398b": jamba_1_5_large,
+    "tinyllama-1.1b": tinyllama_1_1b,
+}
+
+
+def get_config(arch: str, smoke: bool = False):
+    mod = ARCHS[arch]
+    return mod.SMOKE if smoke else mod.CONFIG
+
+
+__all__ = ["ARCHS", "get_config", "SHAPES", "InputShape", "Plan", "plan_for",
+           "SWA_WINDOW", "sagips_gan"]

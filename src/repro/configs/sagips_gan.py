@@ -1,0 +1,23 @@
+"""The paper's own workload: the SAGIPS GAN loop-closure configuration (§V)."""
+from ..core.sync import SyncConfig
+from ..core.workflow import WorkflowConfig
+
+# Tab. III settings
+PAPER = WorkflowConfig(
+    sync=SyncConfig(mode="rma_arar_arar", h=1000),   # best mode, h from §V-C
+    n_param_samples=1024,
+    events_per_sample=100,
+    data_fraction=0.5,
+    gen_lr=1e-5,
+    disc_lr=1e-4,
+)
+
+# reduced settings for CPU-scale convergence studies (same structure)
+REDUCED = WorkflowConfig(
+    sync=SyncConfig(mode="rma_arar_arar", h=50),
+    n_param_samples=64,
+    events_per_sample=25,
+    data_fraction=0.5,
+    gen_lr=2e-4,
+    disc_lr=5e-4,
+)

@@ -1,0 +1,56 @@
+"""Assigned input shapes and the per-(arch, shape) lowering plan."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+from ..models.config import ModelConfig
+
+SWA_WINDOW = 8192     # sliding-window width for the long-context variant
+
+
+@dataclasses.dataclass(frozen=True)
+class InputShape:
+    name: str
+    kind: str            # 'train' | 'prefill' | 'decode'
+    seq_len: int
+    global_batch: int
+
+
+SHAPES = {
+    "train_4k": InputShape("train_4k", "train", 4_096, 256),
+    "prefill_32k": InputShape("prefill_32k", "prefill", 32_768, 32),
+    "decode_32k": InputShape("decode_32k", "decode", 32_768, 128),
+    "long_500k": InputShape("long_500k", "decode", 524_288, 1),
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class Plan:
+    """What to lower for one (arch, shape) pair."""
+    cfg: Optional[ModelConfig]      # possibly a variant (e.g. +sliding window)
+    step: Optional[str]             # 'train' | 'prefill' | 'encode' | 'decode'
+    variant: str = ""               # '' | 'swa'
+    skip_reason: str = ""
+
+
+def plan_for(cfg: ModelConfig, shape: InputShape) -> Plan:
+    """DESIGN.md §Decode-shape coverage rules, encoded."""
+    if shape.kind == "train":
+        return Plan(cfg, "train")
+    if cfg.is_encoder_only:
+        if shape.kind == "prefill":
+            # encoder 'prefill' = a 32k-frame encode pass (no cache)
+            return Plan(cfg, "encode")
+        return Plan(None, None,
+                    skip_reason="encoder-only: no decode step / KV cache")
+    if shape.kind == "prefill":
+        return Plan(cfg, "prefill")
+    # decode shapes
+    if shape.name == "long_500k":
+        if cfg.family == "ssm":
+            return Plan(cfg, "decode")                     # O(1) state decode
+        # hybrids + all attention archs take the sliding-window variant
+        return Plan(cfg.replace(sliding_window=SWA_WINDOW), "decode",
+                    variant="swa")
+    return Plan(cfg, "decode")

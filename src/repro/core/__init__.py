@@ -1,0 +1,16 @@
+"""SAGIPS core — the paper's primary contribution.
+
+gan.py        generator/discriminator (exact paper sizes) + losses
+pipeline.py   differentiable inverse-CDF event sampler ("1D proxy app")
+ring.py       ring-communication backends (vmap simulator / shard_map mesh)
+sync.py       gradient-exchange strategies (Tab. II modes)
+workflow.py   the optimizer ⇄ environment training loop
+ensemble.py   ensemble response & uncertainty (Eqs. 7–8)
+residuals.py  normalized-residual convergence metric (Eq. 6)
+"""
+from . import gan, pipeline, residuals, ensemble, ring, sync, workflow
+from .sync import SyncConfig, MODES
+from .workflow import WorkflowConfig
+
+__all__ = ["gan", "pipeline", "residuals", "ensemble", "ring", "sync",
+           "workflow", "SyncConfig", "WorkflowConfig", "MODES"]

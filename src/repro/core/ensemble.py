@@ -1,0 +1,28 @@
+"""Ensemble response (Eqs. 7–8).
+
+Given M trained generators G_i and a noise batch, the ensemble prediction is
+the mean over generators; the uncertainty is the std over generators;
+both averaged over the noise batch (§VI-A).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import gan
+
+
+def ensemble_response(gen_params_stacked, noise):
+    """gen_params_stacked: pytree with leading M axis; noise [k, NOISE_DIM].
+
+    Returns (p_hat [6], sigma [6]) — Eqs. 7 & 8 averaged over the noise batch.
+    """
+    preds = jax.vmap(gan.generate_params, in_axes=(0, None))(
+        gen_params_stacked, noise)                     # [M, k, 6]
+    p_hat = preds.mean(axis=0)                         # Eq. 7, per noise vec
+    sigma = jnp.sqrt(jnp.mean((preds - p_hat[None]) ** 2, axis=0))   # Eq. 8
+    return p_hat.mean(axis=0), sigma.mean(axis=0)
+
+
+def stack_generators(gen_params_list):
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *gen_params_list)

@@ -1,0 +1,92 @@
+"""GAN optimizer networks — the paper's generator / discriminator MLPs.
+
+Sizes match the paper exactly:
+  generator     noise(135) -> 128 -> 128 -> 128 -> 6      = 51,206 params
+  discriminator (y0,y1)(2) -> 192 -> 192 -> 64 -> 1       = 50,049 params
+(§V-A: "The generator has a total of 51,206 trainable parameters, whereas the
+discriminator has 50,049"; hidden activations Leaky ReLU, Kaiming-normal
+init, generator lr 1e-5, discriminator lr 1e-4.)
+"""
+from __future__ import annotations
+
+import math
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+NOISE_DIM = 135
+N_PARAMS = 6                     # p_0..p_5 of the loop-closure test
+GEN_WIDTHS = (NOISE_DIM, 128, 128, 128, N_PARAMS)
+DISC_WIDTHS = (2, 192, 192, 64, 1)
+LEAK = 0.01
+
+
+def init_mlp(key, widths: Sequence[int], dtype=jnp.float32):
+    """Kaiming-normal MLP init (paper §V-A)."""
+    params = []
+    for i, (a, b) in enumerate(zip(widths[:-1], widths[1:])):
+        key, k = jax.random.split(key)
+        w = jax.random.normal(k, (a, b)) * math.sqrt(2.0 / a)
+        params.append({"w": w.astype(dtype), "b": jnp.zeros((b,), dtype)})
+    return params
+
+
+def mlp_apply(params, x, final_activation=None):
+    for i, layer in enumerate(params):
+        x = x @ layer["w"] + layer["b"]
+        if i < len(params) - 1:
+            x = jax.nn.leaky_relu(x, LEAK)
+    if final_activation is not None:
+        x = final_activation(x)
+    return x
+
+
+def init_generator(key, dtype=jnp.float32):
+    return init_mlp(key, GEN_WIDTHS, dtype)
+
+
+def init_discriminator(key, dtype=jnp.float32):
+    return init_mlp(key, DISC_WIDTHS, dtype)
+
+
+def generate_params(gen_params, noise):
+    """noise [K, NOISE_DIM] -> parameter samples [K, 6] (sigmoid-bounded)."""
+    return mlp_apply(gen_params, noise, final_activation=jax.nn.sigmoid)
+
+
+def discriminate(disc_params, events):
+    """events [N, 2] -> logits [N]."""
+    return mlp_apply(disc_params, events)[..., 0]
+
+
+def param_count(params) -> int:
+    return sum(x.size for x in jax.tree.leaves(params))
+
+
+# ----------------------------------------------------------------------------
+# losses (standard GAN with logits; discriminator: real->1, fake->0)
+
+
+def disc_loss(disc_params, real_events, fake_events):
+    lr_ = discriminate(disc_params, real_events)
+    lf_ = discriminate(disc_params, fake_events)
+    loss_real = jnp.mean(jax.nn.softplus(-lr_))          # -log sigmoid(real)
+    loss_fake = jnp.mean(jax.nn.softplus(lf_))           # -log(1-sigmoid(fake))
+    return loss_real + loss_fake
+
+
+def gen_loss(disc_params, fake_events):
+    """Non-saturating generator loss: maximize log D(fake)."""
+    lf_ = discriminate(disc_params, fake_events)
+    return jnp.mean(jax.nn.softplus(-lf_))
+
+
+def weight_mask(params):
+    """Pytree mask: True for weight matrices, False for biases.
+
+    The paper restricts the ring transfer to *weight* gradients (bias
+    gradients are 1-D tensors known to slow the ring and add no convergence
+    benefit, §V-C).
+    """
+    return [{"w": True, "b": False} for _ in params]

@@ -1,0 +1,23 @@
+"""Convergence metric — normalized parameter residuals (Eq. 6):
+
+    r̂_i = (p_i - p̂_i) / p_i
+
+computed against the loop-closure truth.  The paper uses these (not GAN loss
+curves) as the convergence indicator.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .pipeline import TRUE_PARAMS
+
+
+def normalized_residuals(pred_params, true_params=None):
+    """pred_params [..., 6] -> residuals [..., 6]."""
+    tp = TRUE_PARAMS if true_params is None else true_params
+    return (tp - pred_params) / tp
+
+
+def mean_abs_residual(pred_params, true_params=None):
+    return jnp.mean(jnp.abs(normalized_residuals(pred_params, true_params)))

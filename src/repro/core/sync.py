@@ -1,0 +1,158 @@
+"""Gradient-synchronization strategies — the SAGIPS contribution (Tab. II).
+
+Every strategy is a pure function
+    (grads, mailbox, epoch) -> (synced_grads, new_mailbox)
+evaluated per-rank (under a `Comm` backend).  `mailbox` models the RMA
+window: the buffer a rank's ring predecessor deposited on an earlier epoch
+(staleness >= 1) — reads never block on the producer, which is exactly the
+observable semantics of the paper's one-sided MPI windows (DESIGN.md §2).
+
+Modes:
+    ensemble        no communication (§IV-A)
+    allreduce       synchronous mean all-reduce — the horovod baseline
+    conv_arar       Tab. II "ARAR": global ring, no grouping, every epoch
+    arar_arar       Tab. II "ARAR-ARAR": inner ring every epoch, outer ring
+                    (rank-0 of each inner group) every h epochs
+    rma_arar_arar   Tab. II "RMA-ARAR-ARAR": inner exchange reads the stale
+                    RMA mailbox; outer ring every h epochs
+
+Per §V-C only *weight* gradients ride the ring; bias gradients stay local
+(pass `mask` from `gan.weight_mask` — leaves where mask=False skip sync).
+Per Algorithm 1 the combine is a *sum* (g_i <- g_i + g_{i-1}); `combine=
+"mean"` halves it for scale-invariant ablations.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .ring import Comm
+
+MODES = ("ensemble", "allreduce", "conv_arar", "arar_arar", "rma_arar_arar",
+         "dbtree")
+
+
+@dataclasses.dataclass(frozen=True)
+class SyncConfig:
+    mode: str = "arar_arar"
+    h: int = 1000                  # outer-group update frequency (Tab. I)
+    combine: str = "sum"           # Algorithm 1 uses sum
+    staleness: int = 1             # RMA mailbox depth (paper: 1)
+    fuse_tensors: bool = False     # paper §VII future work: fuse the ring
+    #                                payload into ONE buffer per exchange
+
+
+def _flatten_masked(tree, mask, stacked: bool):
+    """Concatenate mask-selected leaves into one buffer (tensor fusion).
+    stacked=True keeps the leading simulated-rank axis intact."""
+    leaves = []
+    for m, g in zip(jax.tree.leaves(mask), jax.tree.leaves(tree)):
+        if m:
+            leaves.append(g.reshape(g.shape[0], -1) if stacked
+                          else g.reshape(-1))
+    axis = 1 if stacked else 0
+    return jnp.concatenate(leaves, axis=axis)
+
+
+def _unflatten_masked(vec, tree, mask, stacked: bool):
+    out = []
+    off = 0
+    for m, g in zip(jax.tree.leaves(mask), jax.tree.leaves(tree)):
+        if m:
+            n = g.size // (g.shape[0] if stacked else 1)
+            sl = vec[:, off:off + n] if stacked else vec[off:off + n]
+            out.append(sl.reshape(g.shape).astype(g.dtype))
+            off += n
+        else:
+            out.append(g)
+    return jax.tree.unflatten(jax.tree.structure(tree), out)
+
+
+def _comb(a, b, combine):
+    out = a + b
+    return out * 0.5 if combine == "mean" else out
+
+
+def _masked(mask, synced, local):
+    """Apply sync only to leaves where mask is True (weights, not biases)."""
+    if mask is None:
+        return synced
+    return jax.tree.map(lambda m, s, l: s if m else l, mask, synced, local)
+
+
+def init_mailbox(grads_like):
+    return jax.tree.map(jnp.zeros_like, grads_like)
+
+
+def _outer_exchange(comm: Comm, g, epoch, h, combine):
+    """Outer-group ring every h epochs, only for inner-rank-0 members."""
+    recv = comm.recv_ring_outer(g)
+    exchanged = jax.tree.map(lambda a, b: _comb(a, b, combine), g, recv)
+    inner_idx = comm.inner_index()
+    due = (epoch % h) == 0
+    is_member = inner_idx == 0                       # paper fixes rank 0
+    return comm.mask_where(due & is_member, exchanged, g)
+
+
+def sync_gradients(comm: Comm, cfg: SyncConfig, grads, mailbox, epoch,
+                   mask=None):
+    """Returns (synced_grads, new_mailbox)."""
+    if cfg.fuse_tensors and mask is not None and \
+            cfg.mode in ("conv_arar", "arar_arar", "rma_arar_arar", "dbtree"):
+        # paper §VII future work: one fused ring payload instead of one
+        # transfer per weight tensor
+        from .ring import VmapComm
+        stacked = isinstance(comm, VmapComm)
+        fg = {"w": _flatten_masked(grads, mask, stacked)}
+        fmb = {"w": _flatten_masked(mailbox, mask, stacked)}
+        synced, new_mb = _sync_core(comm, cfg, fg, fmb, epoch, {"w": True})
+        return (_unflatten_masked(synced["w"], grads, mask, stacked),
+                _unflatten_masked(new_mb["w"], mailbox, mask, stacked))
+    return _sync_core(comm, cfg, grads, mailbox, epoch, mask)
+
+
+def _sync_core(comm: Comm, cfg: SyncConfig, grads, mailbox, epoch,
+               mask=None):
+    mode, combine = cfg.mode, cfg.combine
+    if mode == "ensemble":
+        return grads, mailbox
+    if mode == "allreduce":
+        return _masked(mask, comm.pmean_all(grads), grads), mailbox
+    if mode == "conv_arar":
+        recv = comm.recv_ring_all(grads)
+        synced = jax.tree.map(lambda a, b: _comb(a, b, combine), grads, recv)
+        return _masked(mask, synced, grads), mailbox
+    if mode == "dbtree":
+        # paper §VII future work (via [18]): log2(R)-stage tree exchange —
+        # a FULL reduction per epoch in ppermute pairs (recursive doubling,
+        # the lock-step SPMD realization of the double-binary-tree schedule)
+        import math as _math
+        R = comm.n_ranks
+        assert R & (R - 1) == 0, "dbtree needs a power-of-two rank count"
+        synced = grads
+        for stage in range(int(_math.log2(R))):
+            recv = comm.recv_hypercube(synced, stage)
+            synced = jax.tree.map(lambda a, b: a + b, synced, recv)
+        # tree reduction accumulates the global SUM; normalize to the mean
+        # so the mode is directly comparable to the allreduce baseline
+        synced = jax.tree.map(lambda x: x / R, synced)
+        return _masked(mask, synced, grads), mailbox
+
+    if mode == "arar_arar":
+        recv = comm.recv_ring_inner(grads)
+        synced = jax.tree.map(lambda a, b: _comb(a, b, combine), grads, recv)
+        new_mailbox = mailbox
+    elif mode == "rma_arar_arar":
+        # read the stale mailbox (never blocks on the producer) ...
+        synced = jax.tree.map(lambda a, b: _comb(a, b, combine), grads, mailbox)
+        # ... and deposit this epoch's *fresh local* grads for the successor
+        new_mailbox = comm.recv_ring_inner(grads)
+    else:
+        raise ValueError(f"unknown sync mode {mode!r}")
+
+    if comm.n_outer > 1:
+        synced = _outer_exchange(comm, synced, epoch, cfg.h, combine)
+    return _masked(mask, synced, grads), new_mailbox

@@ -1,0 +1,211 @@
+"""The SAGIPS workflow — optimizer ⇄ environment loop, distributed.
+
+Per epoch, each rank (§IV-B):
+  1. bootstraps a sub-sample of its local reference data (50% by default),
+  2. runs the generator -> pipeline to produce synthetic events,
+  3. trains its *local* discriminator (never synchronized),
+  4. computes generator gradients through pipeline + discriminator,
+  5. exchanges generator *weight* gradients per the configured sync mode,
+  6. applies its Adam update (generator copies may drift — the ensemble
+     response over ranks is the estimator, §VI-A).
+
+Two drivers share the per-rank functions:
+  * `train_vmap`     — R simulated ranks on one device (convergence studies)
+  * `make_epoch_fn_shard` — shard_map over a mesh (production / dry-run)
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import gan, pipeline, sync as sync_lib
+from .ring import Comm, ShardComm, VmapComm
+from .residuals import normalized_residuals
+from ..optim import adam
+
+
+@dataclasses.dataclass(frozen=True)
+class WorkflowConfig:
+    sync: sync_lib.SyncConfig = sync_lib.SyncConfig()
+    n_param_samples: int = pipeline.PARAM_SAMPLES       # Tab. III
+    events_per_sample: int = pipeline.EVENTS_PER_SAMPLE
+    data_fraction: float = 0.5                          # §VI-C2
+    gen_lr: float = 1e-5                                # §V-A
+    disc_lr: float = 1e-4
+    sampler_impl: str = "jnp"                           # 'jnp' | 'pallas'
+
+    @property
+    def disc_batch(self) -> int:
+        return self.n_param_samples * self.events_per_sample
+
+
+def init_rank_state(key, wcfg: WorkflowConfig):
+    """State of ONE rank (no leading rank axis)."""
+    kg, kd, kr = jax.random.split(key, 3)
+    gen_p = gan.init_generator(kg)
+    disc_p = gan.init_discriminator(kd)
+    gen_opt = adam(wcfg.gen_lr).init(gen_p)
+    disc_opt = adam(wcfg.disc_lr).init(disc_p)
+    mailbox = sync_lib.init_mailbox(gen_p)
+    return {
+        "gen": gen_p, "disc": disc_p,
+        "gen_opt": gen_opt, "disc_opt": disc_opt,
+        "mailbox": mailbox, "rng": kr,
+        "epoch": jnp.zeros((), jnp.int32),
+    }
+
+
+def init_state(key, n_ranks: int, wcfg: WorkflowConfig, same_generator=True):
+    """Stacked state for `n_ranks` simulated ranks.
+
+    Generators start from identical copies (the paper sends "initial copies
+    of the generator weights to each rank"); discriminators are independent.
+    """
+    keys = jax.random.split(key, n_ranks)
+    states = [init_rank_state(k, wcfg) for k in keys]
+    if same_generator:
+        for s in states[1:]:
+            s["gen"] = states[0]["gen"]
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *states)
+
+
+# ----------------------------------------------------------------------------
+# per-rank compute
+
+
+def _bootstrap(rng, data, n_draw: int):
+    """Random draw with replacement (bootstrap, §IV-B)."""
+    idx = jax.random.randint(rng, (n_draw,), 0, data.shape[0])
+    return jnp.take(data, idx, axis=0)
+
+
+def rank_grads(state, data_local, wcfg: WorkflowConfig):
+    """Steps 1–4 for one rank.  Returns (partial_state, gen_grads, metrics)."""
+    rng, k_boot, k_gen = jax.random.split(state["rng"], 3)
+    # identical real/fake counts (§V-A): draw the synthetic batch size
+    real = _bootstrap(k_boot, data_local, wcfg.disc_batch)
+
+    fake, pred_params = pipeline.synthetic_events(
+        state["gen"], k_gen, wcfg.n_param_samples, wcfg.events_per_sample,
+        impl=wcfg.sampler_impl)
+
+    # --- discriminator update (local, immediate — §IV-B) ---------------------
+    d_loss, d_grads = jax.value_and_grad(gan.disc_loss)(
+        state["disc"], real, jax.lax.stop_gradient(fake))
+    d_upd, disc_opt = adam(wcfg.disc_lr).update(d_grads, state["disc_opt"])
+    disc = jax.tree.map(lambda p, u: p + u, state["disc"], d_upd)
+
+    # --- generator gradients through pipeline + (old) discriminator ----------
+    def g_objective(gen_p):
+        fake_ev, _ = pipeline.synthetic_events(
+            gen_p, k_gen, wcfg.n_param_samples, wcfg.events_per_sample,
+            impl=wcfg.sampler_impl)
+        return gan.gen_loss(state["disc"], fake_ev)
+
+    g_loss, g_grads = jax.value_and_grad(g_objective)(state["gen"])
+
+    metrics = {
+        "d_loss": d_loss, "g_loss": g_loss,
+        "pred_params": pred_params.mean(axis=0),
+        "residuals": normalized_residuals(pred_params.mean(axis=0)),
+    }
+    new_state = dict(state, disc=disc, disc_opt=disc_opt, rng=rng)
+    return new_state, g_grads, metrics
+
+
+def rank_apply(state, synced_grads, new_mailbox, wcfg: WorkflowConfig):
+    """Steps 5–6: apply the synchronized generator update."""
+    g_upd, gen_opt = adam(wcfg.gen_lr).update(synced_grads, state["gen_opt"])
+    gen = jax.tree.map(lambda p, u: p + u, state["gen"], g_upd)
+    return dict(state, gen=gen, gen_opt=gen_opt, mailbox=new_mailbox,
+                epoch=state["epoch"] + 1)
+
+
+# ----------------------------------------------------------------------------
+# drivers
+
+
+def make_epoch_fn_vmap(n_outer: int, n_inner: int, wcfg: WorkflowConfig):
+    """Epoch step over stacked state [R, ...]; data_per_rank [R, N, 2]."""
+    comm = VmapComm(n_outer, n_inner)
+    mask = gan.weight_mask(gan.init_generator(jax.random.PRNGKey(0)))
+
+    def epoch(state, data_per_rank):
+        new_state, g_grads, metrics = jax.vmap(
+            lambda s, d: rank_grads(s, d, wcfg))(state, data_per_rank)
+        epoch_idx = new_state["epoch"][0]
+        synced, new_mailbox = sync_lib.sync_gradients(
+            comm, wcfg.sync, g_grads, new_state["mailbox"], epoch_idx, mask)
+        out = jax.vmap(lambda s, g, m: rank_apply(s, g, m, wcfg))(
+            new_state, synced, new_mailbox)
+        return out, metrics
+
+    return jax.jit(epoch)
+
+
+def make_epoch_fn_shard(mesh, wcfg: WorkflowConfig,
+                        outer_axis="pod", inner_axis="data"):
+    """Epoch step over a device mesh: state/data sharded per-rank.
+
+    State pytrees carry a leading rank axis of size n_ranks =
+    prod(mesh.shape) sharded over (outer, inner); inside shard_map each
+    rank sees leading dim 1.
+    """
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    axes = tuple(a for a in (outer_axis, inner_axis) if a in mesh.axis_names)
+    n_outer = mesh.shape[outer_axis] if outer_axis in mesh.axis_names else 1
+    n_inner = mesh.shape[inner_axis]
+    comm = ShardComm(n_outer, n_inner, outer_axis, inner_axis)
+    mask = gan.weight_mask(gan.init_generator(jax.random.PRNGKey(0)))
+
+    def epoch(state, data_local):
+        # leading axis has local size 1 inside shard_map
+        state1 = jax.tree.map(lambda x: x[0], state)
+        new_state, g_grads, metrics = rank_grads(state1, data_local[0], wcfg)
+        synced, new_mailbox = sync_lib.sync_gradients(
+            comm, wcfg.sync, g_grads, new_state["mailbox"], new_state["epoch"],
+            mask)
+        out = rank_apply(new_state, synced, new_mailbox, wcfg)
+        out = jax.tree.map(lambda x: x[None], out)
+        metrics = jax.tree.map(lambda x: x[None], metrics)
+        return out, metrics
+
+    spec = P(axes)
+    fn = jax.shard_map(epoch, mesh=mesh, in_specs=(spec, spec),
+                       out_specs=(spec, spec), check_vma=False)
+    shardings = NamedSharding(mesh, spec)
+    return jax.jit(fn), shardings
+
+
+def train_vmap(key, wcfg: WorkflowConfig, n_outer: int, n_inner: int,
+               n_epochs: int, data, checkpoint_every: int = 0):
+    """Convergence-study driver: R = n_outer*n_inner simulated ranks.
+
+    `data` [N, 2] is the full reference set; the master rank "distributes"
+    a copy to every rank (§IV-B: each rank has its own copy, analyzes a
+    random fraction).  Returns (final_state, history dict of stacked
+    metrics at each recorded epoch).
+    """
+    R = n_outer * n_inner
+    key, k_sub = jax.random.split(key)
+    state = init_state(key, R, wcfg)
+    # each rank keeps a random sub-sample = data_fraction of the input (§VI-C2)
+    n_sub = max(1, int(wcfg.data_fraction * data.shape[0]))
+    sub_keys = jax.random.split(k_sub, R)
+    data_per_rank = jnp.stack([
+        jnp.take(data, jax.random.permutation(k, data.shape[0])[:n_sub], axis=0)
+        for k in sub_keys])
+    epoch_fn = make_epoch_fn_vmap(n_outer, n_inner, wcfg)
+
+    hist = []
+    for e in range(n_epochs):
+        state, metrics = epoch_fn(state, data_per_rank)
+        if checkpoint_every and (e % checkpoint_every == 0
+                                 or e == n_epochs - 1):
+            hist.append(jax.tree.map(lambda x: jnp.asarray(x), metrics))
+    history = jax.tree.map(lambda *xs: jnp.stack(xs), *hist) if hist else {}
+    return state, history

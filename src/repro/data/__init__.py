@@ -1,0 +1,3 @@
+from .pipeline import make_batch, batch_specs, TokenStream
+
+__all__ = ["make_batch", "batch_specs", "TokenStream"]

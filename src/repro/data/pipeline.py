@@ -1,0 +1,81 @@
+"""Data pipeline: synthetic batches per model family + abstract specs.
+
+`make_batch` materializes data (smoke tests, examples);
+`batch_specs` returns ShapeDtypeStructs for the dry-run (no allocation).
+
+The audio / vlm frontends are stubbed per the brief: `features` / `vision`
+are the precomputed frame / patch embeddings the (unimplemented) conv codec
+or ViT would produce.
+"""
+from __future__ import annotations
+
+from typing import Iterator
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..models.config import ModelConfig
+from ..models.model import AUDIO_FEAT_DIM, VISION_EMB_DIM
+
+
+def make_batch(cfg: ModelConfig, batch: int, seq: int, seed: int = 0):
+    """Materialized synthetic batch for family `cfg.family`."""
+    rng = np.random.RandomState(seed)
+    if cfg.family == "audio":
+        return {
+            "features": jnp.asarray(
+                rng.randn(batch, seq, AUDIO_FEAT_DIM), jnp.dtype(cfg.dtype)),
+            "labels": jnp.asarray(
+                rng.randint(0, cfg.vocab_size, (batch, seq)), jnp.int32),
+        }
+    if cfg.family == "vlm":
+        n_vis = min(cfg.num_vision_tokens or 256, seq // 2)
+        return {
+            "tokens": jnp.asarray(
+                rng.randint(0, cfg.vocab_size, (batch, seq - n_vis)), jnp.int32),
+            "vision": jnp.asarray(
+                rng.randn(batch, n_vis, VISION_EMB_DIM), jnp.dtype(cfg.dtype)),
+        }
+    return {"tokens": jnp.asarray(
+        rng.randint(0, cfg.vocab_size, (batch, seq)), jnp.int32)}
+
+
+def batch_specs(cfg: ModelConfig, batch: int, seq: int):
+    """Abstract batch (ShapeDtypeStructs) — dry-run input stand-ins."""
+    dt = jnp.dtype(cfg.dtype)
+    if cfg.family == "audio":
+        return {
+            "features": jax.ShapeDtypeStruct((batch, seq, AUDIO_FEAT_DIM), dt),
+            "labels": jax.ShapeDtypeStruct((batch, seq), jnp.int32),
+        }
+    if cfg.family == "vlm":
+        n_vis = min(cfg.num_vision_tokens or 256, seq // 2)
+        return {
+            "tokens": jax.ShapeDtypeStruct((batch, seq - n_vis), jnp.int32),
+            "vision": jax.ShapeDtypeStruct((batch, n_vis, VISION_EMB_DIM), dt),
+        }
+    return {"tokens": jax.ShapeDtypeStruct((batch, seq), jnp.int32)}
+
+
+class TokenStream:
+    """Infinite deterministic synthetic token stream with a fixed vocab.
+
+    Emulates a sharded training data loader: `shard_index / num_shards`
+    partition the stream the way per-host data loading would on a real
+    cluster (each host reads a disjoint slice).
+    """
+
+    def __init__(self, cfg: ModelConfig, batch: int, seq: int,
+                 seed: int = 0, shard_index: int = 0, num_shards: int = 1):
+        self.cfg, self.batch, self.seq = cfg, batch, seq
+        self.seed, self.shard_index, self.num_shards = seed, shard_index, num_shards
+        self._step = 0
+
+    def __iter__(self) -> Iterator[dict]:
+        return self
+
+    def __next__(self) -> dict:
+        seed = (self.seed + self._step * self.num_shards + self.shard_index) % (2 ** 31)
+        self._step += 1
+        return make_batch(self.cfg, self.batch, self.seq, seed=seed)

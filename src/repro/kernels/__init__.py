@@ -1,0 +1,14 @@
+"""Pallas TPU kernels for the framework's compute hot spots.
+
+flash_attention.py  blockwise online-softmax attention (causal / window, GQA)
+ssd_scan.py         Mamba-2 SSD chunked scan with VMEM state carry
+inverse_cdf.py      the SAGIPS event-sampler transform (paper's hot spot)
+ops.py              jit'd wrappers in model layout
+ref.py              pure-jnp oracles for allclose validation
+"""
+from . import ops, ref
+from .flash_attention import flash_attention
+from .ssd_scan import ssd_scan
+from .inverse_cdf import inverse_cdf
+
+__all__ = ["ops", "ref", "flash_attention", "ssd_scan", "inverse_cdf"]

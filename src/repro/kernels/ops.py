@@ -1,0 +1,118 @@
+"""Public jit'd wrappers for the Pallas kernels.
+
+Model code calls these (when `attn_impl == 'pallas'` / `sampler_impl ==
+'pallas'`); the layout adapters translate between model-layout tensors and
+kernel-layout tensors.  `interpret=True` everywhere on this CPU host — flip
+via REPRO_PALLAS_INTERPRET=0 on a real TPU.
+
+Autodiff: each kernel carries a custom_vjp.  Forward runs the Pallas
+kernel; backward of `inverse_cdf` uses the closed-form partials, while the
+attention / SSD backwards fall back to the jnp reference VJP (a fused
+backward kernel is a listed future optimization — the forward is where the
+paper-relevant memory savings live).
+"""
+from __future__ import annotations
+
+import functools
+import os
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .flash_attention import flash_attention as _flash
+from .ssd_scan import ssd_scan as _ssd
+from .inverse_cdf import inverse_cdf as _icdf
+from . import ref
+
+INTERPRET = os.environ.get("REPRO_PALLAS_INTERPRET", "1") != "0"
+
+
+# ----------------------------------------------------------------------------
+# flash attention (model layout)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4))
+def flash_attention(q, k, v, causal: bool = True, window: Optional[int] = None):
+    """Model layout: q [B,S,KV,G,hd], k/v [B,S,KV,hd] -> [B,S,KV,G,hd]."""
+    B, S, KV, G, hd = q.shape
+    qk = q.reshape(B, S, KV * G, hd).transpose(0, 2, 1, 3)   # [B,H,S,hd]
+    kk = k.transpose(0, 2, 1, 3)                             # [B,KV,S,hd]
+    vk = v.transpose(0, 2, 1, 3)
+    o = _flash(qk, kk, vk, causal=causal, window=window, interpret=INTERPRET)
+    return o.transpose(0, 2, 1, 3).reshape(B, S, KV, G, hd)
+
+
+def _ref_attention(q, k, v, causal, window):
+    B, S, KV, G, hd = q.shape
+    qk = q.reshape(B, S, KV * G, hd).transpose(0, 2, 1, 3)
+    o = ref.flash_attention_ref(qk, k.transpose(0, 2, 1, 3),
+                                v.transpose(0, 2, 1, 3), causal, window)
+    return o.transpose(0, 2, 1, 3).reshape(B, S, KV, G, hd)
+
+
+def _flash_fwd(q, k, v, causal, window):
+    return flash_attention(q, k, v, causal, window), (q, k, v)
+
+
+def _flash_bwd(causal, window, res, g):
+    q, k, v = res
+    _, vjp = jax.vjp(lambda q_, k_, v_: _ref_attention(q_, k_, v_, causal, window),
+                     q, k, v)
+    return vjp(g)
+
+
+flash_attention.defvjp(_flash_fwd, _flash_bwd)
+
+
+# ----------------------------------------------------------------------------
+# SSD scan
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(5,))
+def ssd_scan(x, dt, A, Bc, Cc, chunk: int = 64):
+    """Model layout (see repro.models.ssm.run_ssm)."""
+    return _ssd(x, dt, A, Bc, Cc, chunk=chunk, interpret=INTERPRET)
+
+
+def _ssd_fwd(x, dt, A, Bc, Cc, chunk):
+    return ssd_scan(x, dt, A, Bc, Cc, chunk), (x, dt, A, Bc, Cc)
+
+
+def _ssd_bwd(chunk, res, g):
+    x, dt, A, Bc, Cc = res
+    _, vjp = jax.vjp(ref.ssd_scan_ref, x, dt, A, Bc, Cc)
+    return vjp(g)
+
+
+ssd_scan.defvjp(_ssd_fwd, _ssd_bwd)
+
+
+# ----------------------------------------------------------------------------
+# inverse CDF sampler
+
+
+@jax.custom_vjp
+def inverse_cdf(u, mu, s, k):
+    """Pipeline layout: u [K,E]; mu/s/k [K]."""
+    return _icdf(u, mu, s, k, interpret=INTERPRET)
+
+
+def _icdf_fwd(u, mu, s, k):
+    return inverse_cdf(u, mu, s, k), (u, s, k)
+
+
+def _icdf_bwd(res, g):
+    u, s, k = res
+    uc = jnp.clip(u.astype(jnp.float32), 1e-6, 1 - 1e-6)
+    gf = g.astype(jnp.float32)
+    logit = jnp.log(uc / (1 - uc))
+    du = gf * (s[:, None] / (uc * (1 - uc)) + k[:, None])
+    dmu = gf.sum(axis=1)
+    ds = (gf * logit).sum(axis=1)
+    dk = (gf * (uc - 0.5)).sum(axis=1)
+    return (du.astype(u.dtype), dmu.astype(u.dtype),
+            ds.astype(u.dtype), dk.astype(u.dtype))
+
+
+inverse_cdf.defvjp(_icdf_fwd, _icdf_bwd)

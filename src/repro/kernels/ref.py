@@ -1,0 +1,60 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose references)."""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def flash_attention_ref(q, k, v, causal: bool = True,
+                        window: Optional[int] = None):
+    """q [B,H,Sq,hd], k/v [B,KV,Sk,hd] (GQA: H = KV * G). fp32 math."""
+    B, H, Sq, hd = q.shape
+    KV, Sk = k.shape[1], k.shape[2]
+    G = H // KV
+    qg = q.reshape(B, KV, G, Sq, hd).astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    s = jnp.einsum("bkgqh,bksh->bkgqs", qg, kf) / math.sqrt(hd)
+    qpos = jnp.arange(Sq)[:, None]
+    kpos = jnp.arange(Sk)[None, :]
+    ok = jnp.ones((Sq, Sk), bool)
+    if causal:
+        ok &= kpos <= qpos
+    if window is not None:
+        ok &= kpos > qpos - window
+    s = jnp.where(ok, s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgqs,bksh->bkgqh", p, vf)
+    return o.reshape(B, H, Sq, hd).astype(q.dtype)
+
+
+def ssd_scan_ref(x, dt, A, Bc, Cc):
+    """Sequential SSD recurrence (per-step truth).
+
+    x [B,S,H,P]; dt [B,S,H] post-softplus; A [H] negative; Bc/Cc [B,S,N].
+    """
+    B, S, H, P = x.shape
+    N = Bc.shape[-1]
+    dA = jnp.exp((dt * A[None, None, :]).astype(jnp.float32))
+
+    def step(h, t):
+        h = h * dA[:, t, :, None, None] + jnp.einsum(
+            "bhp,bn->bhpn",
+            x[:, t].astype(jnp.float32) * dt[:, t, :, None],
+            Bc[:, t].astype(jnp.float32))
+        y = jnp.einsum("bhpn,bn->bhp", h, Cc[:, t].astype(jnp.float32))
+        return h, y
+
+    h0 = jnp.zeros((B, H, P, N), jnp.float32)
+    _, ys = jax.lax.scan(step, h0, jnp.arange(S))
+    return jnp.moveaxis(ys, 0, 1).astype(x.dtype)
+
+
+def inverse_cdf_ref(u, mu, s, k):
+    """u [K,E]; mu/s/k [K]. Logistic + shear inverse CDF."""
+    u = jnp.clip(u.astype(jnp.float32), 1e-6, 1 - 1e-6)
+    return (mu[:, None] + s[:, None] * jnp.log(u / (1 - u))
+            + k[:, None] * (u - 0.5)).astype(u.dtype)

@@ -1,0 +1,264 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x input-shape) on the
+production meshes, record memory analysis and roofline terms.
+
+    PYTHONPATH=src python -m repro.launch.dryrun --all
+    PYTHONPATH=src python -m repro.launch.dryrun --arch jamba-1.5-large-398b \
+        --shape train_4k --mesh multi --sync arar_grouped
+
+NOTE the XLA_FLAGS assignment above MUST precede every jax import: jax locks
+the device count at first init.  512 placeholder CPU devices back both the
+single-pod (16,16) and multi-pod (2,16,16) meshes.
+"""
+
+import argparse
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCHS, SHAPES, get_config, plan_for
+from repro.data import batch_specs
+from repro.launch import hlo_cost
+from repro.launch.mesh import (HBM_BW, ICI_BW, PEAK_FLOPS_BF16,
+                               make_production_mesh)
+from repro.models import model as model_lib
+from repro.parallel import sharding as shd
+from repro.serving import make_serve_step, serve_specs
+from repro.serving.engine import cache_shardings
+from repro.training import TrainConfig, make_train_state, make_train_step
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                           "benchmarks", "results", "dryrun")
+
+
+def _with_shardings(abstract_tree, shardings_tree):
+    return jax.tree.map(
+        lambda s, sh: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=sh),
+        abstract_tree, shardings_tree)
+
+
+def _batch_sharded(cfg, shape, mesh):
+    specs = batch_specs(cfg, shape.global_batch, shape.seq_len)
+    axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    sh = jax.tree.map(lambda s: NamedSharding(mesh, P(axes)), specs)
+    sh = shd.fix_shardings(specs, sh)
+    return _with_shardings(specs, sh)
+
+
+def lower_combo(arch: str, shape_name: str, mesh, tcfg: TrainConfig,
+                mesh_name: str, last_logits: bool = False,
+                attn_impl: str = "", remat_policy: str = ""):
+    """Returns (lowered, compiled, step_kind, cfg) or a skip record."""
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    plan = plan_for(cfg, shape)
+    if plan.step is None:
+        return {"skip": plan.skip_reason}
+    cfg = plan.cfg
+    if attn_impl:
+        cfg = cfg.replace(attn_impl=attn_impl)
+    if remat_policy:
+        cfg = cfg.replace(remat_policy=remat_policy)
+
+    if plan.step == "train":
+        state, st_sh = make_train_state(jax.random.PRNGKey(0), cfg, tcfg,
+                                        mesh, abstract=True)
+        state_in = _with_shardings(state, st_sh)
+        batch_in = _batch_sharded(cfg, shape, mesh)
+        fn, _ = make_train_step(cfg, tcfg, mesh, state_example=state)
+        lowered = fn.lower(state_in, batch_in)
+    elif plan.step in ("prefill", "encode"):
+        params = jax.eval_shape(lambda: model_lib.init(jax.random.PRNGKey(0), cfg))
+        with shd.axis_rules(mesh):
+            p_sh = shd.tree_shardings(params, model_lib.param_axes(params, cfg))
+        params_in = _with_shardings(params, p_sh)
+        batch_in = _batch_sharded(cfg, shape, mesh)
+        if plan.step == "encode":
+            def fwd(p, b):
+                with shd.axis_rules(mesh):
+                    return model_lib.forward(p, b, cfg)[0]
+            lowered = jax.jit(fwd).lower(params_in, batch_in)
+        else:
+            def pre(p, b):
+                with shd.axis_rules(mesh):
+                    return model_lib.prefill(p, b, cfg, shape.seq_len,
+                                             last_logits_only=last_logits)
+            lowered = jax.jit(pre).lower(params_in, batch_in)
+    else:                                      # decode
+        params = jax.eval_shape(lambda: model_lib.init(jax.random.PRNGKey(0), cfg))
+        with shd.axis_rules(mesh):
+            p_sh = shd.tree_shardings(params, model_lib.param_axes(params, cfg))
+        params_in = _with_shardings(params, p_sh)
+        tokens, cache = serve_specs(cfg, shape.global_batch, shape.seq_len)
+        c_sh = cache_shardings(cfg, mesh, cache)
+        cache_in = _with_shardings(cache, c_sh)
+        axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+        tok_sh = shd.divisible_sharding(tokens.shape,
+                                        NamedSharding(mesh, P(axes)))
+        tok_in = jax.ShapeDtypeStruct(tokens.shape, tokens.dtype,
+                                      sharding=tok_sh)
+        fn = make_serve_step(cfg, mesh, donate_cache=False)
+        lowered = fn.lower(params_in, tok_in, cache_in)
+    return {"lowered": lowered, "cfg": cfg, "step": plan.step,
+            "variant": plan.variant, "shape": shape}
+
+
+def roofline_terms(report: hlo_cost.CostReport, cfg, shape, step: str,
+                   n_chips: int):
+    compute_s = report.flops / PEAK_FLOPS_BF16
+    memory_s = report.hbm_bytes / HBM_BW
+    collective_s = report.total_collective_bytes / ICI_BW
+    pc = cfg.param_counts()
+    if step == "train":
+        tokens = shape.global_batch * shape.seq_len
+        model_flops = 6.0 * pc["active"] * tokens
+    elif step in ("prefill", "encode"):
+        tokens = shape.global_batch * shape.seq_len
+        model_flops = 2.0 * pc["active"] * tokens
+    else:
+        model_flops = 2.0 * pc["active"] * shape.global_batch
+    model_flops_per_chip = model_flops / n_chips
+    terms = {
+        "compute_s": compute_s,
+        "memory_s": memory_s,
+        "collective_s": collective_s,
+        "cross_pod_s": report.cross_pod_bytes / ICI_BW,
+        "model_flops_per_chip": model_flops_per_chip,
+        "hlo_flops_per_chip": report.flops,
+        "useful_ratio": model_flops_per_chip / report.flops if report.flops else 0.0,
+    }
+    terms["bottleneck"] = max(
+        ("compute_s", "memory_s", "collective_s"), key=lambda k: terms[k])
+    return terms
+
+
+def run_one(arch: str, shape_name: str, mesh_name: str, tcfg: TrainConfig,
+            out_dir: str, quiet: bool = False, last_logits: bool = False,
+            tag_suffix: str = "", attn_impl: str = "", remat_policy: str = ""):
+    mesh = make_production_mesh(multi_pod=(mesh_name == "multi"))
+    n_chips = mesh.devices.size
+    tag = f"{arch}__{shape_name}__{mesh_name}"
+    if tcfg.sync_mode != "allreduce":
+        tag += f"__{tcfg.sync_mode}"
+    tag += tag_suffix
+    t0 = time.time()
+    try:
+        combo = lower_combo(arch, shape_name, mesh, tcfg, mesh_name,
+                            last_logits=last_logits, attn_impl=attn_impl,
+                            remat_policy=remat_policy)
+        if "skip" in combo:
+            rec = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+                   "status": "skip", "reason": combo["skip"]}
+        else:
+            lowered = combo["lowered"]
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+            ma = compiled.memory_analysis()
+            ca = compiled.cost_analysis() or {}
+            hlo_text = compiled.as_text()
+            report = hlo_cost.analyze(hlo_text)
+            terms = roofline_terms(report, combo["cfg"], combo["shape"],
+                                   combo["step"], n_chips)
+            # kernel-fused accounting (§Perf iteration: Pallas attention/SSD
+            # keep intermediates in VMEM — only scope-boundary HBM traffic)
+            report_fused = hlo_cost.analyze(
+                hlo_text, fused_scopes=("flash_fused", "ssd_fused"))
+            terms_fused = roofline_terms(report_fused, combo["cfg"],
+                                         combo["shape"], combo["step"],
+                                         n_chips)
+            rec = {
+                "arch": arch, "shape": shape_name, "mesh": mesh_name,
+                "sync": tcfg.sync_mode,
+                "status": "ok", "step": combo["step"],
+                "variant": combo["variant"],
+                "n_chips": n_chips,
+                "lower_s": round(t_lower, 2), "compile_s": round(t_compile, 2),
+                "memory": {
+                    "argument_bytes": ma.argument_size_in_bytes,
+                    "output_bytes": ma.output_size_in_bytes,
+                    "temp_bytes": ma.temp_size_in_bytes,
+                    "generated_code_bytes": ma.generated_code_size_in_bytes,
+                },
+                "xla_cost_analysis": {k: ca.get(k) for k in
+                                      ("flops", "bytes accessed") if k in ca},
+                "hlo_report": report.as_dict(),
+                "roofline": terms,
+                "hlo_report_fused": report_fused.as_dict(),
+                "roofline_fused": terms_fused,
+            }
+    except Exception as e:                                    # noqa: BLE001
+        rec = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+               "status": "error", "error": f"{type(e).__name__}: {e}",
+               "traceback": traceback.format_exc()[-2000:]}
+    os.makedirs(out_dir, exist_ok=True)
+    with open(os.path.join(out_dir, tag + ".json"), "w") as f:
+        json.dump(rec, f, indent=1, default=str)
+    if not quiet:
+        if rec["status"] == "ok":
+            r = rec["roofline"]
+            print(f"[{tag}] OK lower {rec['lower_s']}s compile "
+                  f"{rec['compile_s']}s | compute {r['compute_s']:.3e}s "
+                  f"memory {r['memory_s']:.3e}s collective "
+                  f"{r['collective_s']:.3e}s -> {r['bottleneck']} "
+                  f"| useful {r['useful_ratio']:.2f} "
+                  f"| temp {rec['memory']['temp_bytes']/2**30:.2f} GiB/dev",
+                  flush=True)
+        elif rec["status"] == "skip":
+            print(f"[{tag}] SKIP: {rec['reason']}", flush=True)
+        else:
+            print(f"[{tag}] ERROR: {rec['error']}", flush=True)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=sorted(ARCHS.keys()))
+    ap.add_argument("--shape", choices=sorted(SHAPES.keys()))
+    ap.add_argument("--mesh", choices=("single", "multi", "both"),
+                    default="both")
+    ap.add_argument("--sync", default="allreduce")
+    ap.add_argument("--sync-h", type=int, default=100)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--last-logits", action="store_true",
+                    help="prefill returns only the last position's logits")
+    ap.add_argument("--tag-suffix", default="")
+    ap.add_argument("--attn-impl", default="",
+                    help="override cfg.attn_impl (e.g. seq_parallel)")
+    ap.add_argument("--remat-policy", default="",
+                    help="override cfg.remat_policy (full|dots)")
+    ap.add_argument("--out", default=os.path.normpath(RESULTS_DIR))
+    args = ap.parse_args()
+
+    tcfg = TrainConfig(sync_mode=args.sync, sync_h=args.sync_h,
+                       microbatches=args.microbatches)
+    archs = sorted(ARCHS.keys()) if args.all or not args.arch else [args.arch]
+    shapes = sorted(SHAPES.keys()) if args.all or not args.shape else [args.shape]
+    meshes = ("single", "multi") if args.mesh == "both" else (args.mesh,)
+
+    n_ok = n_skip = n_err = 0
+    for arch in archs:
+        for shape in shapes:
+            for mesh_name in meshes:
+                rec = run_one(arch, shape, mesh_name, tcfg, args.out,
+                              last_logits=args.last_logits,
+                              tag_suffix=args.tag_suffix,
+                              attn_impl=args.attn_impl,
+                              remat_policy=args.remat_policy)
+                n_ok += rec["status"] == "ok"
+                n_skip += rec["status"] == "skip"
+                n_err += rec["status"] == "error"
+    print(f"\ndry-run complete: {n_ok} ok, {n_skip} skip, {n_err} error")
+    if n_err:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,45 @@
+"""Production serving entry point (CPU host runs the same path reduced).
+
+    PYTHONPATH=src python -m repro.launch.serve --arch tinyllama-1.1b \
+        --smoke --batch 4 --new-tokens 8
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+
+from repro.configs import ARCHS, get_config
+from repro.models import model as M
+from repro.serving import generate
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=sorted(ARCHS.keys()), required=True)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--new-tokens", type=int, default=8)
+    ap.add_argument("--window", type=int, default=None)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch, smoke=args.smoke)
+    if not cfg.supports_decode:
+        raise SystemExit(f"{args.arch} is encoder-only")
+    if args.window:
+        cfg = cfg.replace(sliding_window=args.window)
+    params = M.init(jax.random.PRNGKey(0), cfg)
+    prompts = jax.random.randint(jax.random.PRNGKey(1),
+                                 (args.batch, args.prompt_len), 0,
+                                 cfg.vocab_size)
+    t0 = time.time()
+    out = generate(params, cfg, prompts, args.new_tokens)
+    print(f"{out.shape[0]} requests x {args.new_tokens} tokens in "
+          f"{time.time()-t0:.2f}s")
+    print("request 0:", out[0].tolist())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,62 @@
+"""Production training entry point.
+
+On a real TPU cluster this launches the sharded trainer on the production
+mesh; on this CPU host it runs the same code path over the host's devices
+(optionally with XLA_FLAGS-faked device counts).
+
+    PYTHONPATH=src python -m repro.launch.train --arch mamba2-130m \
+        --steps 50 --batch 8 --seq 256 --sync arar_grouped
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+
+from repro.configs import ARCHS, get_config
+from repro.data import TokenStream
+from repro.launch.mesh import make_host_mesh, make_production_mesh
+from repro.training import TrainConfig, Trainer
+from repro.training.trainer import SYNC_MODES
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=sorted(ARCHS.keys()), required=True)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--sync", choices=SYNC_MODES, default="allreduce")
+    ap.add_argument("--sync-h", type=int, default=100)
+    ap.add_argument("--mesh", choices=("host", "single", "multi"),
+                    default="host")
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=0)
+    args = ap.parse_args()
+
+    if args.mesh == "host":
+        n = len(jax.devices())
+        mesh = make_host_mesh((1, n) if n > 1 else (1, 1)) if n > 1 else None
+    else:
+        mesh = make_production_mesh(multi_pod=(args.mesh == "multi"))
+
+    cfg = get_config(args.arch, smoke=args.smoke)
+    tcfg = TrainConfig(lr=args.lr, warmup=min(20, args.steps // 5 + 1),
+                       total_steps=args.steps,
+                       microbatches=args.microbatches,
+                       sync_mode=args.sync, sync_h=args.sync_h)
+    trainer = Trainer(cfg, tcfg, jax.random.PRNGKey(0), mesh)
+    stream = TokenStream(cfg, args.batch, args.seq)
+    state = trainer.run(stream, args.steps,
+                        log_every=max(args.steps // 20, 1))
+    if args.ckpt_dir:
+        from repro.checkpoint import save_checkpoint
+        save_checkpoint(args.ckpt_dir, int(state["step"]), state)
+        print(f"checkpoint written to {args.ckpt_dir}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,4 @@
+from .config import ModelConfig
+from . import layers, blocks, model, moe, ssm
+
+__all__ = ["ModelConfig", "layers", "blocks", "model", "moe", "ssm"]

@@ -1,0 +1,156 @@
+"""Transformer / Mamba / MoE blocks with init, forward, decode and logical
+sharding axes.  A block = pre-norm mixer (+ residual) then optional pre-norm
+MLP/MoE (+ residual).  Mamba-2 blocks (family 'ssm') have no separate MLP.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from . import layers, moe as moe_lib, ssm as ssm_lib
+from ..parallel.sharding import shard
+
+
+# ----------------------------------------------------------------------------
+# init
+
+
+def init_block(key, cfg: ModelConfig, kind: str, mlp_kind: str, dtype):
+    k1, k2, k3 = jax.random.split(key, 3)
+    p = {"ln1": jnp.ones((cfg.d_model,), dtype)}
+    if kind == "attn":
+        p["attn"] = layers.init_attention(k1, cfg, dtype)
+    else:
+        p["ssm"] = ssm_lib.init_ssm(k1, cfg, dtype)
+    if mlp_kind != "none":
+        p["ln2"] = jnp.ones((cfg.d_model,), dtype)
+        if mlp_kind == "moe":
+            p["moe"] = moe_lib.init_moe(k2, cfg, dtype)
+        else:
+            p["mlp"] = layers.init_mlp(k3, cfg.d_model, cfg.d_ff, dtype)
+    return p
+
+
+# ----------------------------------------------------------------------------
+# logical sharding axes (same tree structure as params)
+
+_ATTN_AXES = {
+    "wq": ("fsdp", "model"), "wk": ("fsdp", "model"), "wv": ("fsdp", "model"),
+    "wo": ("model", "fsdp"),
+    "bq": ("model",), "bk": ("model",), "bv": ("model",),
+    "q_norm": (None,), "k_norm": (None,),
+}
+_MLP_AXES = {"w1": ("fsdp", "model"), "w3": ("fsdp", "model"), "w2": ("model", "fsdp")}
+_SSM_AXES = {
+    "wz": ("fsdp", "model"), "wx": ("fsdp", "model"),
+    "wB": ("fsdp", None), "wC": ("fsdp", None), "wdt": ("fsdp", None),
+    "conv_w": (None, "model"), "conv_b": ("model",),
+    "A_log": (None,), "D": (None,), "dt_bias": (None,),
+    "gnorm": ("model",), "out_proj": ("model", "fsdp"),
+}
+_MOE_AXES = {
+    "router": ("fsdp", None),
+    # expert dim over `model` (expert parallel) AND ff dim over `model` as a
+    # fallback: when the expert count doesn't divide the axis (60, 40), the
+    # divisibility fixer drops the expert axis and the ff sharding still
+    # provides tensor parallelism
+    "we1": ("expert", "fsdp", "model"), "we3": ("expert", "fsdp", "model"),
+    "we2": ("expert", "model", "fsdp"),
+    "shared": _MLP_AXES,
+}
+
+
+def block_axes(p_block) -> dict:
+    """Logical axes tree matching an (already initialized) block's params."""
+    out = {}
+    for name, sub in p_block.items():
+        if name in ("ln1", "ln2"):
+            out[name] = (None,)
+        elif name == "attn":
+            out[name] = {k: _ATTN_AXES[k] for k in sub}
+        elif name == "ssm":
+            out[name] = {k: _SSM_AXES[k] for k in sub}
+        elif name == "mlp":
+            out[name] = {k: _MLP_AXES[k] for k in sub}
+        elif name == "moe":
+            out[name] = {k: (_MOE_AXES[k] if k != "shared"
+                             else {kk: _MLP_AXES[kk] for kk in sub["shared"]})
+                         for k in sub}
+    return out
+
+
+# ----------------------------------------------------------------------------
+# forward (train / prefill)
+
+
+def run_block(p, x, cfg: ModelConfig, kind: str, mlp_kind: str, positions):
+    """Returns (x, aux_loss)."""
+    aux = jnp.zeros((), jnp.float32)
+    h = layers.rms_norm(x, p["ln1"], cfg.norm_eps)
+    if kind == "attn":
+        h = layers.run_attention(p["attn"], h, cfg, positions)
+    else:
+        h = ssm_lib.run_ssm(p["ssm"], h, cfg)
+    x = shard(x + h, "batch", None, None)
+    if mlp_kind != "none":
+        h = layers.rms_norm(x, p["ln2"], cfg.norm_eps)
+        if mlp_kind == "moe":
+            h, aux = moe_lib.run_moe(p["moe"], h, cfg)
+        else:
+            h = layers.run_mlp(p["mlp"], h)
+        x = shard(x + h, "batch", None, None)
+    return x, aux
+
+
+# ----------------------------------------------------------------------------
+# decode (one token, cached)
+
+
+def init_block_cache(batch: int, cfg: ModelConfig, kind: str, window: int, dtype):
+    if kind == "attn":
+        KV, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+        return {
+            "k": jnp.zeros((batch, window, KV, hd), dtype),
+            "v": jnp.zeros((batch, window, KV, hd), dtype),
+        }
+    return ssm_lib.init_ssm_cache(batch, cfg, dtype)
+
+
+def cache_axes(kind: str):
+    if kind == "attn":
+        return {"k": ("batch", None, "kv_heads", None),
+                "v": ("batch", None, "kv_heads", None)}
+    return {"state": ("batch", "ssm_heads", None, None),
+            "conv": ("batch", None, "model")}
+
+
+def run_block_decode(p, x, cache, pos, cfg: ModelConfig, kind: str, mlp_kind: str):
+    """x [B,1,D], pos scalar int32 (tokens already in cache). Returns (x, cache)."""
+    B = x.shape[0]
+    h = layers.rms_norm(x, p["ln1"], cfg.norm_eps)
+    if kind == "attn":
+        W = cache["k"].shape[1]
+        q, k, v = layers.qkv_project(p["attn"], h, cfg,
+                                     jnp.full((1,), pos, jnp.int32))
+        slot = jnp.mod(pos, W)                       # ring buffer when windowed
+        kc = jax.lax.dynamic_update_slice_in_dim(cache["k"], k, slot, axis=1)
+        vc = jax.lax.dynamic_update_slice_in_dim(cache["v"], v, slot, axis=1)
+        cache = {"k": kc, "v": vc}
+        valid = jnp.minimum(pos + 1, W)
+        o = layers.attention_decode(q, kc, vc, jnp.full((B,), valid), cfg)
+        o = o.reshape(B, 1, cfg.num_heads * cfg.resolved_head_dim)
+        h = jnp.einsum("bsf,fd->bsd", o, p["attn"]["wo"])
+    else:
+        h, cache = ssm_lib.run_ssm_decode(p["ssm"], h, cache, cfg)
+    x = x + h
+    if mlp_kind != "none":
+        h = layers.rms_norm(x, p["ln2"], cfg.norm_eps)
+        if mlp_kind == "moe":
+            h, _ = moe_lib.run_moe(p["moe"], h, cfg)
+        else:
+            h = layers.run_mlp(p["mlp"], h)
+        x = x + h
+    return x, cache

@@ -1,0 +1,256 @@
+"""Core neural layers: RMSNorm, RoPE, GQA attention (naive / chunked-flash /
+decode), SwiGLU MLP.
+
+All layers are pure functions over parameter dicts (pytrees).  Shapes follow
+the conventions:
+    x      [B, S, D]
+    q      [B, S, H, hd]
+    k, v   [B, S, KV, hd]
+Grouped-query attention never materializes repeated KV heads — the einsums
+carry an explicit (KV, H/KV) group split so both memory and HLO FLOPs reflect
+the real GQA cost.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+
+# ----------------------------------------------------------------------------
+# initializers
+
+
+def kaiming(key, shape, dtype, fan_in=None):
+    fan_in = fan_in or shape[0]
+    std = math.sqrt(2.0 / fan_in)
+    return (std * jax.random.normal(key, shape)).astype(dtype)
+
+
+# ----------------------------------------------------------------------------
+# norms
+
+
+def rms_norm(x, weight, eps=1e-6):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (x * weight.astype(jnp.float32)).astype(dt)
+
+
+# ----------------------------------------------------------------------------
+# RoPE
+
+
+def rope_freqs(head_dim: int, theta: float):
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x, positions, theta: float):
+    """x [..., S, n_heads, hd]; positions [..., S] or [S]."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                       # [hd/2]
+    angles = positions[..., None].astype(jnp.float32) * freqs  # [..., S, hd/2]
+    cos = jnp.cos(angles)[..., None, :]                 # [..., S, 1, hd/2]
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ----------------------------------------------------------------------------
+# attention parameter init
+
+
+def init_attention(key, cfg: ModelConfig, dtype):
+    D, H, KV, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": kaiming(ks[0], (D, H * hd), dtype),
+        "wk": kaiming(ks[1], (D, KV * hd), dtype),
+        "wv": kaiming(ks[2], (D, KV * hd), dtype),
+        "wo": kaiming(ks[3], (H * hd, D), dtype, fan_in=H * hd),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((H * hd,), dtype)
+        p["bk"] = jnp.zeros((KV * hd,), dtype)
+        p["bv"] = jnp.zeros((KV * hd,), dtype)
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((hd,), dtype)
+        p["k_norm"] = jnp.ones((hd,), dtype)
+    return p
+
+
+def qkv_project(p, x, cfg: ModelConfig, positions):
+    """Project x to rotated q [B,S,KV,G,hd] and k,v [B,S,KV,hd]."""
+    B, S, _ = x.shape
+    H, KV, hd = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    G = H // KV
+    q = jnp.einsum("bsd,df->bsf", x, p["wq"])
+    k = jnp.einsum("bsd,df->bsf", x, p["wk"])
+    v = jnp.einsum("bsd,df->bsf", x, p["wv"])
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = q.reshape(B, S, H, hd)
+    k = k.reshape(B, S, KV, hd)
+    v = v.reshape(B, S, KV, hd)
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    q = q.reshape(B, S, KV, G, hd)
+    return q, k, v
+
+
+def _mask_bias(q_pos, k_pos, causal: bool, window: Optional[int]):
+    """Additive mask bias [Sq, Sk] in fp32."""
+    ok = jnp.ones((q_pos.shape[0], k_pos.shape[0]), bool)
+    if causal:
+        ok &= k_pos[None, :] <= q_pos[:, None]
+    if window is not None:
+        ok &= k_pos[None, :] > q_pos[:, None] - window
+    return jnp.where(ok, 0.0, -1e30).astype(jnp.float32)
+
+
+def attention_naive(q, k, v, cfg: ModelConfig, q_pos, k_pos):
+    """Reference attention. q [B,Sq,KV,G,hd], k/v [B,Sk,KV,hd].
+
+    Scoped `flash_fused`: on the TPU target this whole block is the Pallas
+    flash kernel (kernels/flash_attention.py), so the fused-accounting
+    roofline (DESIGN.md §6) treats its intermediates as VMEM-resident.
+    """
+    with jax.named_scope("flash_fused"):
+        hd = q.shape[-1]
+        scores = jnp.einsum("bqkgh,bskh->bkgqs", q, k).astype(jnp.float32) / math.sqrt(hd)
+        scores = scores + _mask_bias(q_pos, k_pos, cfg.causal, cfg.sliding_window)
+        probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+        return jnp.einsum("bkgqs,bskh->bqkgh", probs, v)
+
+
+def attention_chunked(q, k, v, cfg: ModelConfig, q_pos, k_pos):
+    """Flash-equivalent chunked attention in pure jnp (online softmax).
+
+    Memory is O(chunk * S) instead of O(S^2); this is the lowering used for
+    the dry-run so the compiled HLO reflects the Pallas kernel's working set.
+    """
+    with jax.named_scope("flash_fused"):
+        return _attention_chunked_body(q, k, v, cfg, q_pos, k_pos)
+
+
+def _attention_chunked_body(q, k, v, cfg: ModelConfig, q_pos, k_pos):
+    B, Sq, KV, G, hd = q.shape
+    Sk = k.shape[1]
+    C = min(cfg.attn_chunk, Sq, Sk)
+    nq, nk = Sq // C, Sk // C
+    assert Sq % C == 0 and Sk % C == 0, (Sq, Sk, C)
+    scale = 1.0 / math.sqrt(hd)
+
+    qc = q.reshape(B, nq, C, KV, G, hd)
+    kc = k.reshape(B, nk, C, KV, hd)
+    vc = v.reshape(B, nk, C, KV, hd)
+    qp = q_pos.reshape(nq, C)
+    kp = k_pos.reshape(nk, C)
+
+    def q_block(qi, qpi):
+        # online softmax over kv chunks
+        def kv_step(carry, inp):
+            m, l, acc = carry
+            ki, vi, kpi = inp
+            s = jnp.einsum("bckgh,bskh->bkgcs", qi, ki).astype(jnp.float32) * scale
+            s = s + _mask_bias(qpi, kpi, cfg.causal, cfg.sliding_window)
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l = l * corr + p.sum(axis=-1)
+            acc = acc * corr[..., None] + jnp.einsum(
+                "bkgcs,bskh->bkgch", p, vi.astype(jnp.float32))
+            return (m_new, l, acc), None
+
+        m0 = jnp.full((B, KV, G, C), -jnp.inf, jnp.float32)
+        l0 = jnp.zeros((B, KV, G, C), jnp.float32)
+        a0 = jnp.zeros((B, KV, G, C, hd), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(
+            kv_step, (m0, l0, a0),
+            (jnp.moveaxis(kc, 1, 0), jnp.moveaxis(vc, 1, 0), kp))
+        out = acc / jnp.maximum(l[..., None], 1e-30)
+        return jnp.moveaxis(out, -2, 1).astype(q.dtype)   # [B,C,KV,G,hd]
+
+    out = jax.lax.map(lambda args: q_block(*args),
+                      (jnp.moveaxis(qc, 1, 0), qp))        # [nq,B,C,KV,G,hd]
+    return jnp.moveaxis(out, 0, 1).reshape(B, Sq, KV, G, hd)
+
+
+def attention_decode(q, k_cache, v_cache, cache_len, cfg: ModelConfig):
+    """Single-token decode attention against a (possibly ring-buffer) cache.
+
+    q [B,1,KV,G,hd]; k_cache/v_cache [B,W,KV,hd]; cache_len [B] valid length.
+    For sliding-window configs the cache is a ring buffer of width W =
+    sliding_window and every slot is valid once warm; masking handles the
+    cold-start prefix.
+    """
+    hd = q.shape[-1]
+    W = k_cache.shape[1]
+    scores = jnp.einsum("bqkgh,bskh->bkgqs", q, k_cache).astype(jnp.float32)
+    scores = scores / math.sqrt(hd)
+    slot = jnp.arange(W)
+    valid = slot[None, :] < cache_len[:, None]              # [B, W]
+    scores = jnp.where(valid[:, None, None, None, :], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    return jnp.einsum("bkgqs,bskh->bqkgh", probs, v_cache)
+
+
+def run_attention(p, x, cfg: ModelConfig, positions):
+    """Full attention sublayer (projections + mixing + output)."""
+    o, _, _ = run_attention_with_kv(p, x, cfg, positions)
+    return o
+
+
+def run_attention_with_kv(p, x, cfg: ModelConfig, positions):
+    """As run_attention but also returns (k, v) for prefill cache writes."""
+    from ..parallel.sharding import shard
+    B, S, D = x.shape
+    q, k, v = qkv_project(p, x, cfg, positions)
+    impl = cfg.attn_impl
+    if impl == "seq_parallel":
+        # context parallelism: when the head count doesn't divide the model
+        # axis, shard the *sequence* over it instead — q stays local, K/V
+        # are gathered once per layer, score matmuls need no collectives
+        # (§Perf iteration V2; internvl2 14 heads / granite 24 heads vs 16)
+        q = shard(q, "batch", "seq_shard", None, None, None)
+        k = shard(k, "batch", None, None, None)
+        v = shard(v, "batch", None, None, None)
+        o = attention_naive(q, k, v, cfg, positions, positions)
+        o = shard(o, "batch", "seq_shard", None, None, None)
+    elif impl == "chunked" and S % min(cfg.attn_chunk, S) == 0 and S > cfg.attn_chunk:
+        o = attention_chunked(q, k, v, cfg, positions, positions)
+    elif impl == "pallas":
+        from repro.kernels import ops as kops
+        o = kops.flash_attention(q, k, v, causal=cfg.causal,
+                                 window=cfg.sliding_window)
+    else:
+        o = attention_naive(q, k, v, cfg, positions, positions)
+    o = o.reshape(B, S, cfg.num_heads * cfg.resolved_head_dim)
+    return jnp.einsum("bsf,fd->bsd", o, p["wo"]), k, v
+
+
+# ----------------------------------------------------------------------------
+# MLP
+
+
+def init_mlp(key, d_model, d_ff, dtype):
+    ks = jax.random.split(key, 3)
+    return {
+        "w1": kaiming(ks[0], (d_model, d_ff), dtype),
+        "w3": kaiming(ks[1], (d_model, d_ff), dtype),
+        "w2": kaiming(ks[2], (d_ff, d_model), dtype, fan_in=d_ff),
+    }
+
+
+def run_mlp(p, x):
+    h = jax.nn.silu(jnp.einsum("bsd,df->bsf", x, p["w1"]))
+    h = h * jnp.einsum("bsd,df->bsf", x, p["w3"])
+    return jnp.einsum("bsf,fd->bsd", h, p["w2"])

@@ -1,0 +1,110 @@
+"""Mixture-of-Experts MLP with shared + routed experts.
+
+Dispatch is sort-based (GShard-style capacity buffers built with argsort +
+scatter) rather than one-hot einsum, so the compiled HLO FLOPs equal the
+*activated* expert FLOPs (E buffers of capacity C ~= T*k/E*cf) instead of the
+T*E*C one-hot dispatch cost.  Expert weights are laid out [E, D, F] so the
+expert axis shards over the `model` mesh axis (expert parallelism).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .layers import init_mlp, kaiming, run_mlp
+
+
+def moe_capacity(tokens: int, cfg: ModelConfig) -> int:
+    c = int(tokens * cfg.top_k * cfg.capacity_factor / cfg.num_experts) + 1
+    return max(8, -(-c // 8) * 8)     # round up to a multiple of 8
+
+
+def init_moe(key, cfg: ModelConfig, dtype):
+    D, E, F = cfg.d_model, cfg.num_experts, cfg.moe_d_ff
+    ks = jax.random.split(key, 5)
+    p = {
+        "router": kaiming(ks[0], (D, E), jnp.float32),
+        "we1": kaiming(ks[1], (E, D, F), dtype, fan_in=D),
+        "we3": kaiming(ks[2], (E, D, F), dtype, fan_in=D),
+        "we2": kaiming(ks[3], (E, F, D), dtype, fan_in=F),
+    }
+    if cfg.num_shared_experts:
+        p["shared"] = init_mlp(ks[4], D, cfg.num_shared_experts * F, dtype)
+    return p
+
+
+def run_moe(p, x, cfg: ModelConfig):
+    """Returns (y [B,S,D], aux_loss scalar)."""
+    B, S, D = x.shape
+    E, K = cfg.num_experts, cfg.top_k
+    T = B * S
+    xf = x.reshape(T, D)
+
+    logits = jnp.einsum("td,de->te", xf.astype(jnp.float32), p["router"])
+    probs = jax.nn.softmax(logits, axis=-1)                       # [T, E]
+    gate, idx = jax.lax.top_k(probs, K)                           # [T, K]
+    gate = gate / jnp.maximum(gate.sum(-1, keepdims=True), 1e-9)  # renormalize
+
+    # ---- capacity dispatch (sort-based) ------------------------------------
+    C = moe_capacity(T, cfg)
+    e_flat = idx.reshape(T * K)
+    order = jnp.argsort(e_flat)                                   # stable
+    e_sorted = e_flat[order]
+    starts = jnp.searchsorted(e_sorted, jnp.arange(E))            # [E]
+    pos = jnp.arange(T * K) - starts[e_sorted]                    # rank in expert
+    keep = pos < C
+    tok = order // K                                              # source token
+    slot = e_sorted * C + jnp.where(keep, pos, T * K)             # OOB -> dropped
+
+    buf = jnp.zeros((E * C, D), xf.dtype)
+    buf = buf.at[slot].set(xf[tok], mode="drop")
+    buf = buf.reshape(E, C, D)
+
+    # ---- expert computation (activated FLOPs only) -------------------------
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", buf, p["we1"]))
+    h = h * jnp.einsum("ecd,edf->ecf", buf, p["we3"])
+    out = jnp.einsum("ecf,efd->ecd", h, p["we2"]).reshape(E * C, D)
+
+    # ---- combine ------------------------------------------------------------
+    gathered = out[jnp.minimum(slot, E * C - 1)]
+    w = gate.reshape(T * K)[order] * keep
+    y = jnp.zeros((T, D), x.dtype)
+    y = y.at[tok].add((gathered * w[:, None]).astype(x.dtype))
+
+    if cfg.num_shared_experts:
+        y = y + run_mlp(p["shared"], x).reshape(T, D)
+
+    # ---- load-balance auxiliary loss (Switch-style) -------------------------
+    frac = jnp.zeros((E,), jnp.float32).at[e_flat].add(1.0) / (T * K)
+    imp = probs.mean(axis=0)
+    aux = E * jnp.sum(frac * imp)
+    return y.reshape(B, S, D), aux
+
+
+def run_moe_reference(p, x, cfg: ModelConfig):
+    """Oracle: per-token dense loop over top-k experts (no capacity drops).
+
+    Used only in tests on tiny shapes.
+    """
+    B, S, D = x.shape
+    T = B * S
+    xf = x.reshape(T, D)
+    logits = jnp.einsum("td,de->te", xf.astype(jnp.float32), p["router"])
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate, idx = jax.lax.top_k(probs, cfg.top_k)
+    gate = gate / jnp.maximum(gate.sum(-1, keepdims=True), 1e-9)
+
+    def expert(e, t):
+        h = jax.nn.silu(xf[t] @ p["we1"][e]) * (xf[t] @ p["we3"][e])
+        return h @ p["we2"][e]
+
+    y = jnp.zeros((T, D), x.dtype)
+    for t in range(T):
+        acc = jnp.zeros((D,), jnp.float32)
+        for k in range(cfg.top_k):
+            acc = acc + gate[t, k] * expert(idx[t, k], t).astype(jnp.float32)
+        y = y.at[t].set(acc.astype(x.dtype))
+    if cfg.num_shared_experts:
+        y = y + run_mlp(p["shared"], x).reshape(T, D)
+    return y.reshape(B, S, D)

@@ -1,0 +1,211 @@
+"""Mamba-2 (SSD — state-space duality) mixer layer.  [arXiv:2405.21060]
+
+The sequence mixer computes, per head h with scalar decay A_h:
+    h_t = exp(A_h * dt_t) * h_{t-1} + dt_t * B_t x_t     (state  [P, N])
+    y_t = C_t . h_t + D_h * x_t
+
+Training uses the chunked SSD form: quadratic attention-like compute inside
+chunks of length Q, a cross-chunk state recurrence via lax.scan (or the
+Pallas kernel when cfg.attn_impl == 'pallas').  Decode is the O(1) state
+update.  Single B/C group (G=1), multi-head over the expanded inner dim.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .layers import kaiming
+
+
+def init_ssm(key, cfg: ModelConfig, dtype):
+    D = cfg.d_model
+    di, N, H = cfg.ssm_d_inner, cfg.ssm_state, cfg.ssm_heads
+    ks = jax.random.split(key, 8)
+    conv_ch = di + 2 * N
+    return {
+        # separate projections (not the fused in_proj of the reference CUDA
+        # code) so each output dim shards cleanly over the `model` axis
+        "wz": kaiming(ks[0], (D, di), dtype),
+        "wx": kaiming(ks[4], (D, di), dtype),
+        "wB": kaiming(ks[5], (D, N), dtype),
+        "wC": kaiming(ks[6], (D, N), dtype),
+        "wdt": kaiming(ks[7], (D, H), dtype),
+        "conv_w": (0.1 * jax.random.normal(ks[1], (cfg.ssm_conv, conv_ch))).astype(dtype),
+        "conv_b": jnp.zeros((conv_ch,), dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, H)).astype(jnp.float32),
+        "D": jnp.ones((H,), jnp.float32),
+        "dt_bias": jnp.zeros((H,), jnp.float32),
+        "gnorm": jnp.ones((di,), dtype),
+        "out_proj": kaiming(ks[3], (di, D), dtype, fan_in=di),
+    }
+
+
+def _split_proj(p, x, cfg: ModelConfig):
+    z = jnp.einsum("bsd,df->bsf", x, p["wz"])
+    xin = jnp.einsum("bsd,df->bsf", x, p["wx"])
+    Bc = jnp.einsum("bsd,df->bsf", x, p["wB"])
+    Cc = jnp.einsum("bsd,df->bsf", x, p["wC"])
+    dt = jnp.einsum("bsd,df->bsf", x, p["wdt"])
+    return z, xin, Bc, Cc, dt
+
+
+def _causal_conv(xbc, w, b):
+    """Depthwise causal conv over time. xbc [B,S,ch], w [K,ch]."""
+    K = w.shape[0]
+    pad = jnp.pad(xbc, ((0, 0), (K - 1, 0), (0, 0)))
+    out = sum(pad[:, i:i + xbc.shape[1], :] * w[i] for i in range(K))
+    return jax.nn.silu(out + b)
+
+
+def ssd_chunked(xh, dt, A, Bc, Cc, chunk: int):
+    """Chunked SSD scan (pure jnp).
+
+    xh [B,S,H,P]; dt [B,S,H] (post-softplus); A [H] (negative);
+    Bc, Cc [B,S,N] (single group).  Returns y [B,S,H,P].
+    """
+    with jax.named_scope("ssd_fused"):
+        y, _ = _ssd_chunked_body(xh, dt, A, Bc, Cc, chunk)
+        return y
+
+
+def ssd_chunked_with_state(xh, dt, A, Bc, Cc, chunk: int):
+    """Chunked SSD that also returns the final SSM state [B,H,P,N] — the
+    prefill path (sequential per-token scans are ~500x more HLO ops)."""
+    with jax.named_scope("ssd_fused"):
+        return _ssd_chunked_body(xh, dt, A, Bc, Cc, chunk)
+
+
+def _ssd_chunked_body(xh, dt, A, Bc, Cc, chunk: int):
+    B, S, H, P = xh.shape
+    N = Bc.shape[-1]
+    Q = min(chunk, S)
+    S0 = S
+    if S % Q:           # pad tail (dt=0 => padded tokens carry zero weight)
+        pad = Q - S % Q
+        xh = jnp.pad(xh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bc = jnp.pad(Bc, ((0, 0), (0, pad), (0, 0)))
+        Cc = jnp.pad(Cc, ((0, 0), (0, pad), (0, 0)))
+        S = S + pad
+    nc = S // Q
+
+    dA = (dt * A[None, None, :]).astype(jnp.float32)               # [B,S,H] <= 0
+    xw = (xh.astype(jnp.float32) * dt[..., None])                  # dt-weighted input
+
+    # reshape into chunks
+    dAc = dA.reshape(B, nc, Q, H)
+    xc = xw.reshape(B, nc, Q, H, P)
+    Bcc = Bc.astype(jnp.float32).reshape(B, nc, Q, N)
+    Ccc = Cc.astype(jnp.float32).reshape(B, nc, Q, N)
+
+    seg = jnp.cumsum(dAc, axis=2)                                  # [B,nc,Q,H]
+    # ---- intra-chunk (quadratic within chunk) ------------------------------
+    # L[i,j] = exp(seg_i - seg_j) for j <= i
+    rel = seg[:, :, :, None, :] - seg[:, :, None, :, :]            # [B,nc,Qi,Qj,H]
+    causal = jnp.tril(jnp.ones((Q, Q), bool))[None, None, :, :, None]
+    # mask BEFORE exp: exp of the (positive) upper-triangle would overflow and
+    # poison gradients through the where
+    L = jnp.exp(jnp.where(causal, rel, -jnp.inf))
+    cb = jnp.einsum("bcin,bcjn->bcij", Ccc, Bcc)                   # [B,nc,Qi,Qj]
+    y_intra = jnp.einsum("bcij,bcijh,bcjhp->bcihp", cb, L, xc)
+
+    # ---- chunk states -------------------------------------------------------
+    decay_to_end = jnp.exp(seg[:, :, -1:, :] - seg)                # [B,nc,Q,H]
+    states = jnp.einsum("bcqn,bcqh,bcqhp->bchpn", Bcc, decay_to_end, xc)
+
+    # ---- inter-chunk recurrence ---------------------------------------------
+    chunk_decay = jnp.exp(seg[:, :, -1, :])                        # [B,nc,H]
+
+    def step(h_prev, inp):
+        st, dec = inp                                              # [B,H,P,N], [B,H]
+        h_new = h_prev * dec[:, :, None, None] + st
+        return h_new, h_prev
+
+    h0 = jnp.zeros((B, H, P, N), jnp.float32)
+    h_final, h_prevs = jax.lax.scan(
+        step, h0, (jnp.moveaxis(states, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)))
+    h_prevs = jnp.moveaxis(h_prevs, 0, 1)                          # [B,nc,H,P,N]
+
+    # ---- inter-chunk contribution -------------------------------------------
+    decay_from_start = jnp.exp(seg)                                # [B,nc,Q,H]
+    y_inter = jnp.einsum("bcqn,bcqh,bchpn->bcqhp", Ccc, decay_from_start, h_prevs)
+
+    y = (y_intra + y_inter).reshape(B, S, H, P)[:, :S0]
+    return y.astype(xh.dtype), h_final
+
+
+def ssd_sequential(xh, dt, A, Bc, Cc):
+    """Oracle: literal per-step recurrence (slow, tests only)."""
+    B, S, H, P = xh.shape
+    N = Bc.shape[-1]
+    dA = jnp.exp((dt * A[None, None, :]).astype(jnp.float32))
+
+    def step(h, t):
+        h = h * dA[:, t, :, None, None] + jnp.einsum(
+            "bhp,bn->bhpn", xh[:, t].astype(jnp.float32) * dt[:, t, :, None], Bc[:, t].astype(jnp.float32))
+        y = jnp.einsum("bhpn,bn->bhp", h, Cc[:, t].astype(jnp.float32))
+        return h, y
+
+    h0 = jnp.zeros((B, H, P, N), jnp.float32)
+    _, ys = jax.lax.scan(step, h0, jnp.arange(S))
+    return jnp.moveaxis(ys, 0, 1).astype(xh.dtype)
+
+
+def run_ssm(p, x, cfg: ModelConfig):
+    """Full Mamba-2 block (train / prefill). x [B,S,D] -> [B,S,D]."""
+    from .layers import rms_norm
+    B, S, D = x.shape
+    di, N, H, P = cfg.ssm_d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    z, xin, Bc, Cc, dt = _split_proj(p, x, cfg)
+    xbc = _causal_conv(jnp.concatenate([xin, Bc, Cc], axis=-1), p["conv_w"], p["conv_b"])
+    xin, Bc, Cc = jnp.split(xbc, [di, di + N], axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+    xh = xin.reshape(B, S, H, P)
+    if cfg.attn_impl == "pallas":
+        from repro.kernels import ops as kops
+        y = kops.ssd_scan(xh, dt, A, Bc, Cc, chunk=cfg.ssm_chunk)
+    else:
+        y = ssd_chunked(xh, dt, A, Bc, Cc, cfg.ssm_chunk)
+    y = y + xh * p["D"][None, None, :, None].astype(xh.dtype)
+    y = y.reshape(B, S, di)
+    y = rms_norm(y * jax.nn.silu(z), p["gnorm"], cfg.norm_eps)
+    return jnp.einsum("bsf,fd->bsd", y, p["out_proj"])
+
+
+# ----------------------------------------------------------------------------
+# decode
+
+
+def init_ssm_cache(batch: int, cfg: ModelConfig, dtype):
+    di, N, H, P = cfg.ssm_d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    return {
+        "state": jnp.zeros((batch, H, P, N), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.ssm_conv - 1, di + 2 * N), dtype),
+    }
+
+
+def run_ssm_decode(p, x, cache, cfg: ModelConfig):
+    """One-token decode. x [B,1,D] -> (y [B,1,D], new cache)."""
+    from .layers import rms_norm
+    B = x.shape[0]
+    di, N, H, P = cfg.ssm_d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    z, xin, Bc, Cc, dt = _split_proj(p, x, cfg)
+    xbc = jnp.concatenate([xin, Bc, Cc], axis=-1)                  # [B,1,ch]
+    win = jnp.concatenate([cache["conv"], xbc], axis=1)            # [B,K,ch]
+    new_conv = win[:, 1:]
+    out = jax.nn.silu(jnp.einsum("bkc,kc->bc", win, p["conv_w"]) + p["conv_b"])
+    xin, Bc, Cc = jnp.split(out, [di, di + N], axis=-1)
+    dt = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + p["dt_bias"])   # [B,H]
+    A = -jnp.exp(p["A_log"])
+    xh = xin.reshape(B, H, P)
+    dA = jnp.exp(dt * A[None, :])                                  # [B,H]
+    state = cache["state"] * dA[:, :, None, None] + jnp.einsum(
+        "bhp,bn->bhpn", xh.astype(jnp.float32) * dt[..., None], Bc.astype(jnp.float32))
+    y = jnp.einsum("bhpn,bn->bhp", state, Cc.astype(jnp.float32)).astype(x.dtype)
+    y = y + xh * p["D"][None, :, None].astype(x.dtype)
+    y = y.reshape(B, 1, di)
+    y = rms_norm(y * jax.nn.silu(z), p["gnorm"], cfg.norm_eps)
+    y = jnp.einsum("bsf,fd->bsd", y, p["out_proj"])
+    return y, {"state": state, "conv": new_conv}

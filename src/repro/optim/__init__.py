@@ -1,0 +1,6 @@
+from .optimizers import adam, adamw, sgd, apply_updates, global_norm, clip_by_global_norm
+from .schedules import constant, cosine_decay, linear_warmup_cosine
+
+__all__ = ["adam", "adamw", "sgd", "apply_updates", "global_norm",
+           "clip_by_global_norm", "constant", "cosine_decay",
+           "linear_warmup_cosine"]

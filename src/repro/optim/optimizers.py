@@ -1,0 +1,109 @@
+"""Optimizers from scratch (no optax on this box).
+
+Each optimizer is a pair of pure functions:
+    init(params)                  -> opt_state
+    update(grads, opt_state, params, lr_or_schedule) -> (updates, opt_state)
+`updates` are *deltas* to add to params (sign included).
+Moments are kept in fp32 regardless of param dtype (mixed-precision master
+statistics).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, NamedTuple, Optional, Union
+
+import jax
+import jax.numpy as jnp
+
+Schedule = Union[float, Callable[[jnp.ndarray], jnp.ndarray]]
+
+
+def _lr_at(lr: Schedule, step):
+    return lr(step) if callable(lr) else jnp.asarray(lr, jnp.float32)
+
+
+def global_norm(tree):
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def clip_by_global_norm(tree, max_norm):
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda x: (x.astype(jnp.float32) * scale).astype(x.dtype),
+                        tree), norm
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable
+    update: Callable
+
+
+def adam(lr: Schedule, b1=0.9, b2=0.999, eps=1e-8):
+    def init(params):
+        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return {"mu": jax.tree.map(zeros, params),
+                "nu": jax.tree.map(zeros, params),
+                "step": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params=None):
+        step = state["step"] + 1
+        lr_t = _lr_at(lr, step)
+        mu = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g.astype(jnp.float32),
+                          state["mu"], grads)
+        nu = jax.tree.map(lambda v, g: b2 * v + (1 - b2) * jnp.square(g.astype(jnp.float32)),
+                          state["nu"], grads)
+        bc1 = 1 - b1 ** step.astype(jnp.float32)
+        bc2 = 1 - b2 ** step.astype(jnp.float32)
+        upd = jax.tree.map(
+            lambda m, v, g: (-(lr_t * (m / bc1) / (jnp.sqrt(v / bc2) + eps))
+                             ).astype(g.dtype),
+            mu, nu, grads)
+        return upd, {"mu": mu, "nu": nu, "step": step}
+
+    return Optimizer(init, update)
+
+
+def adamw(lr: Schedule, b1=0.9, b2=0.999, eps=1e-8, weight_decay=0.0):
+    base = adam(lr, b1, b2, eps)
+
+    def update(grads, state, params):
+        upd, state = base.update(grads, state, params)
+        if weight_decay:
+            lr_t = _lr_at(lr, state["step"])
+            upd = jax.tree.map(
+                lambda u, p: u - (lr_t * weight_decay * p.astype(jnp.float32)
+                                  ).astype(u.dtype),
+                upd, params)
+        return upd, state
+
+    return Optimizer(base.init, update)
+
+
+def sgd(lr: Schedule, momentum: float = 0.0):
+    def init(params):
+        st = {"step": jnp.zeros((), jnp.int32)}
+        if momentum:
+            st["mom"] = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        return st
+
+    def update(grads, state, params=None):
+        step = state["step"] + 1
+        lr_t = _lr_at(lr, step)
+        if momentum:
+            mom = jax.tree.map(lambda m, g: momentum * m + g.astype(jnp.float32),
+                               state["mom"], grads)
+            upd = jax.tree.map(lambda m, g: (-lr_t * m).astype(g.dtype), mom, grads)
+            return upd, {"step": step, "mom": mom}
+        upd = jax.tree.map(lambda g: (-lr_t * g.astype(jnp.float32)).astype(g.dtype),
+                           grads)
+        return upd, {"step": step}
+
+    return Optimizer(init, update)
+
+
+def apply_updates(params, updates):
+    return jax.tree.map(lambda p, u: (p.astype(jnp.float32)
+                                      + u.astype(jnp.float32)).astype(p.dtype),
+                        params, updates)

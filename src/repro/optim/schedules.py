@@ -1,0 +1,26 @@
+"""Learning-rate schedules."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant(value: float):
+    return lambda step: jnp.asarray(value, jnp.float32)
+
+
+def cosine_decay(peak: float, total_steps: int, floor: float = 0.0):
+    def fn(step):
+        t = jnp.minimum(step.astype(jnp.float32), total_steps) / total_steps
+        return floor + 0.5 * (peak - floor) * (1 + jnp.cos(jnp.pi * t))
+    return fn
+
+
+def linear_warmup_cosine(peak: float, warmup: int, total_steps: int,
+                         floor: float = 0.0):
+    cos = cosine_decay(peak, max(total_steps - warmup, 1), floor)
+
+    def fn(step):
+        s = step.astype(jnp.float32)
+        warm = peak * s / max(warmup, 1)
+        return jnp.where(s < warmup, warm, cos(s - warmup))
+    return fn

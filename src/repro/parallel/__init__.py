@@ -1,0 +1,3 @@
+from .sharding import axis_rules, shard, logical_to_spec, named_sharding, current_mesh
+
+__all__ = ["axis_rules", "shard", "logical_to_spec", "named_sharding", "current_mesh"]

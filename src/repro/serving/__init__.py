@@ -1,0 +1,3 @@
+from .engine import make_serve_step, make_prefill_fn, generate, serve_specs
+
+__all__ = ["make_serve_step", "make_prefill_fn", "generate", "serve_specs"]

@@ -1,0 +1,83 @@
+"""Serving engine: prefill + batched single-token decode with KV / SSM caches.
+
+`serve_step` is what the decode dry-run shapes lower: ONE new token against a
+cache of `context_len` tokens.  Sliding-window configs use a ring-buffer KV
+cache of width `sliding_window` (this is what makes `long_500k` lowering
+sub-quadratic and O(window) in memory for attention layers; SSM layers are
+O(1) regardless).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..models import model as model_lib
+from ..models.config import ModelConfig
+from ..parallel import sharding as shd
+
+
+def serve_specs(cfg: ModelConfig, batch: int, context_len: int):
+    """Abstract (tokens, cache) input specs for the decode dry-run."""
+    def abstract():
+        cache = model_lib.init_cache(cfg, batch, context_len)
+        return cache
+    cache = jax.eval_shape(abstract)
+    tokens = jax.ShapeDtypeStruct((batch, 1), jnp.int32)
+    return tokens, cache
+
+
+def cache_shardings(cfg: ModelConfig, mesh: Mesh, cache):
+    axes = model_lib.cache_logical_axes(cfg)
+    with shd.axis_rules(mesh):
+        return shd.tree_shardings(cache, axes)
+
+
+def make_serve_step(cfg: ModelConfig, mesh: Optional[Mesh] = None,
+                    donate_cache: bool = True):
+    """Returns jitted (params, tokens, cache) -> (logits, new_cache)."""
+    def step(params, tokens, cache):
+        with shd.axis_rules(mesh):
+            return model_lib.decode_step(params, tokens, cache, cfg)
+    return jax.jit(step, donate_argnums=(2,) if donate_cache else ())
+
+
+def make_prefill_fn(cfg: ModelConfig, mesh: Optional[Mesh] = None):
+    def fn(params, batch, context_len=None):
+        with shd.axis_rules(mesh):
+            return model_lib.prefill(params, batch, cfg, context_len)
+    return jax.jit(fn, static_argnames=("context_len",))
+
+
+def generate(params, cfg: ModelConfig, prompt_tokens, max_new_tokens: int,
+             context_len: Optional[int] = None, temperature: float = 0.0,
+             key=None, mesh: Optional[Mesh] = None):
+    """Greedy / sampled generation loop (examples & tests).
+
+    prompt_tokens [B, S] int32.  Returns [B, S + max_new_tokens].
+    """
+    B, S = prompt_tokens.shape
+    ctx = context_len or (S + max_new_tokens)
+    prefill_fn = make_prefill_fn(cfg, mesh)
+    step_fn = make_serve_step(cfg, mesh)
+    logits, cache = prefill_fn(params, {"tokens": prompt_tokens}, ctx)
+    out = [prompt_tokens]
+    last = logits[:, -1:]
+
+    def pick(lg, k):
+        if temperature <= 0:
+            return jnp.argmax(lg, axis=-1).astype(jnp.int32)
+        return jax.random.categorical(k, lg / temperature, axis=-1).astype(jnp.int32)
+
+    key = key if key is not None else jax.random.PRNGKey(0)
+    for i in range(max_new_tokens):
+        key, k = jax.random.split(key)
+        nxt = pick(last, k)                      # [B,1]
+        out.append(nxt)
+        if i == max_new_tokens - 1:
+            break
+        last, cache = step_fn(params, nxt, cache)
+    return jnp.concatenate(out, axis=1)

@@ -1,0 +1,3 @@
+from .trainer import TrainConfig, Trainer, make_train_state, make_train_step
+
+__all__ = ["TrainConfig", "Trainer", "make_train_state", "make_train_step"]

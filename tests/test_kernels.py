@@ -1,0 +1,132 @@
+"""Per-kernel validation: shape/dtype sweeps + hypothesis properties, all
+against the ref.py pure-jnp oracles (interpret=True on CPU)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ref
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.inverse_cdf import inverse_cdf
+from repro.kernels.ssd_scan import ssd_scan
+
+
+def _tol(dt):
+    return dict(rtol=2e-2, atol=2e-2) if dt == jnp.bfloat16 \
+        else dict(rtol=1e-4, atol=1e-5)
+
+
+@pytest.mark.parametrize("B,H,KV,S,hd", [
+    (2, 4, 2, 256, 64), (1, 4, 4, 128, 32), (2, 2, 1, 256, 64),
+    (1, 8, 2, 384, 64), (1, 2, 2, 128, 128),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("causal,window", [(True, None), (False, None),
+                                           (True, 64)])
+def test_flash_attention_sweep(B, H, KV, S, hd, dtype, causal, window):
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (B, H, S, hd), dtype)
+    k = jax.random.normal(ks[1], (B, KV, S, hd), dtype)
+    v = jax.random.normal(ks[2], (B, KV, S, hd), dtype)
+    o = flash_attention(q, k, v, causal=causal, window=window, interpret=True)
+    r = ref.flash_attention_ref(q, k, v, causal=causal, window=window)
+    np.testing.assert_allclose(np.asarray(o, np.float32),
+                               np.asarray(r, np.float32), **_tol(dtype))
+
+
+def test_flash_attention_block_shapes():
+    """Result must not depend on the BlockSpec tiling."""
+    ks = jax.random.split(jax.random.PRNGKey(1), 3)
+    q = jax.random.normal(ks[0], (1, 2, 256, 64))
+    k = jax.random.normal(ks[1], (1, 2, 256, 64))
+    v = jax.random.normal(ks[2], (1, 2, 256, 64))
+    outs = [flash_attention(q, k, v, block_q=bq, block_k=bk, interpret=True)
+            for bq, bk in [(64, 64), (128, 64), (64, 128), (256, 256)]]
+    for o in outs[1:]:
+        np.testing.assert_allclose(np.asarray(outs[0]), np.asarray(o),
+                                   rtol=1e-5, atol=1e-6)
+
+
+@pytest.mark.parametrize("B,S,H,P,N,chunk", [
+    (2, 128, 3, 32, 16, 32), (1, 100, 2, 64, 128, 64),
+    (1, 64, 1, 16, 8, 16), (2, 96, 4, 32, 32, 48),
+])
+def test_ssd_scan_sweep(B, S, H, P, N, chunk):
+    ks = jax.random.split(jax.random.PRNGKey(2), 5)
+    x = jax.random.normal(ks[0], (B, S, H, P))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, S, H)))
+    A = -jnp.exp(jax.random.normal(ks[2], (H,)))
+    Bc = jax.random.normal(ks[3], (B, S, N))
+    Cc = jax.random.normal(ks[4], (B, S, N))
+    y = ssd_scan(x, dt, A, Bc, Cc, chunk=chunk, interpret=True)
+    r = ref.ssd_scan_ref(x, dt, A, Bc, Cc)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(r),
+                               rtol=1e-3, atol=1e-3)
+
+
+def test_ssd_chunk_invariance():
+    """SSD output must not depend on the chunk size."""
+    ks = jax.random.split(jax.random.PRNGKey(3), 5)
+    B, S, H, P, N = 1, 128, 2, 16, 8
+    x = jax.random.normal(ks[0], (B, S, H, P))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, S, H)))
+    A = -jnp.exp(jax.random.normal(ks[2], (H,)))
+    Bc = jax.random.normal(ks[3], (B, S, N))
+    Cc = jax.random.normal(ks[4], (B, S, N))
+    outs = [ssd_scan(x, dt, A, Bc, Cc, chunk=c, interpret=True)
+            for c in (16, 32, 64, 128)]
+    for o in outs[1:]:
+        np.testing.assert_allclose(np.asarray(outs[0]), np.asarray(o),
+                                   rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("K,E", [(100, 64), (1024, 100), (7, 3), (256, 128)])
+def test_inverse_cdf_sweep(K, E):
+    ks = jax.random.split(jax.random.PRNGKey(4), 4)
+    u = jax.random.uniform(ks[0], (K, E))
+    mu = jax.random.normal(ks[1], (K,))
+    s = jax.nn.softplus(jax.random.normal(ks[2], (K,)))
+    k = jax.random.normal(ks[3], (K,))
+    y = inverse_cdf(u, mu, s, k, interpret=True)
+    r = ref.inverse_cdf_ref(u, mu, s, k)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(r),
+                               rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(1, 40), st.integers(1, 40),
+       st.floats(-3, 3), st.floats(0.05, 2.0), st.floats(-1, 1))
+def test_inverse_cdf_property_monotone(K, E, mu, s, k):
+    """F^{-1} must be monotonically increasing in u when s > |k|*u-range
+    (the sampler's validity envelope) and match the oracle everywhere."""
+    u = jnp.linspace(0.01, 0.99, E)[None, :].repeat(K, axis=0)
+    muv = jnp.full((K,), mu)
+    sv = jnp.full((K,), s)
+    kv = jnp.full((K,), k)
+    y = np.asarray(inverse_cdf(u, muv, sv, kv, interpret=True))
+    r = np.asarray(ref.inverse_cdf_ref(u, muv, sv, kv))
+    np.testing.assert_allclose(y, r, rtol=1e-5, atol=1e-5)
+    if s > abs(k) * 0.25:          # logistic term dominates the shear
+        assert np.all(np.diff(y, axis=1) > -1e-5)
+
+
+def test_kernel_gradients_match_reference():
+    """custom_vjp backward paths agree with jax.grad of the oracle."""
+    ks = jax.random.split(jax.random.PRNGKey(5), 3)
+    B, S, KV, G, hd = 1, 64, 2, 2, 32
+    q = jax.random.normal(ks[0], (B, S, KV, G, hd))
+    k = jax.random.normal(ks[1], (B, S, KV, hd))
+    v = jax.random.normal(ks[2], (B, S, KV, hd))
+    from repro.kernels import ops
+
+    def loss_kernel(q_):
+        return jnp.sum(ops.flash_attention(q_, k, v) ** 2)
+
+    def loss_ref(q_):
+        return jnp.sum(ops._ref_attention(q_, k, v, True, None) ** 2)
+
+    g1 = jax.grad(loss_kernel)(q)
+    g2 = jax.grad(loss_ref)(q)
+    np.testing.assert_allclose(np.asarray(g1), np.asarray(g2),
+                               rtol=1e-4, atol=1e-4)

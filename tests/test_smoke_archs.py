@@ -1,0 +1,66 @@
+"""Per-architecture smoke tests: reduced variant of each assigned family runs
+one forward + one train step on CPU; output shapes + finiteness asserted.
+Decoder families also run a one-token decode step against a warm cache.
+"""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import ARCHS, get_config
+from repro.data import make_batch
+from repro.models import model as M
+from repro.training import TrainConfig, make_train_state, make_train_step
+
+B, S = 2, 32
+
+
+@pytest.fixture(scope="module")
+def tcfg():
+    return TrainConfig(lr=1e-3, warmup=1, total_steps=10, grad_clip=1.0)
+
+
+@pytest.mark.parametrize("arch", sorted(ARCHS.keys()))
+def test_smoke_forward_and_train_step(arch, tcfg):
+    cfg = get_config(arch, smoke=True)
+    assert cfg.num_layers <= 2 and cfg.d_model <= 512
+    if cfg.num_experts:
+        assert cfg.num_experts <= 4
+    batch = make_batch(cfg, B, S, seed=0)
+
+    state, _ = make_train_state(jax.random.PRNGKey(0), cfg, tcfg)
+    logits, aux = M.forward(state["params"], batch, cfg)
+    assert logits.shape == (B, S, cfg.vocab_size)
+    assert bool(jnp.all(jnp.isfinite(logits.astype(jnp.float32))))
+
+    step, _ = make_train_step(cfg, tcfg, donate=False)
+    new_state, metrics = step(state, batch)
+    assert bool(jnp.isfinite(metrics["loss"]))
+    assert int(new_state["step"]) == 1
+    # params actually moved
+    moved = any(
+        float(jnp.max(jnp.abs(a.astype(jnp.float32) - b.astype(jnp.float32)))) > 0
+        for a, b in zip(jax.tree.leaves(state["params"]),
+                        jax.tree.leaves(new_state["params"])))
+    assert moved
+
+
+@pytest.mark.parametrize("arch", [a for a in sorted(ARCHS.keys())
+                                  if get_config(a, smoke=True).supports_decode
+                                  and get_config(a, smoke=True).family != "vlm"])
+def test_smoke_decode_step(arch):
+    cfg = get_config(arch, smoke=True)
+    params = M.init(jax.random.PRNGKey(1), cfg)
+    cache = M.init_cache(cfg, B, 16)
+    tok = jnp.ones((B, 1), jnp.int32)
+    logits, cache = M.decode_step(params, tok, cache, cfg)
+    assert logits.shape == (B, 1, cfg.vocab_size)
+    assert bool(jnp.all(jnp.isfinite(logits.astype(jnp.float32))))
+    assert int(cache["pos"]) == 1
+    # second step advances
+    logits, cache = M.decode_step(params, tok, cache, cfg)
+    assert int(cache["pos"]) == 2
+
+
+def test_encoder_only_has_no_decode():
+    cfg = get_config("hubert-xlarge", smoke=True)
+    assert cfg.is_encoder_only and not cfg.supports_decode

@@ -1,0 +1,87 @@
+"""End-to-end behaviour tests for the SAGIPS system.
+
+1. The full workflow (generator -> pipeline -> per-rank discriminators ->
+   ring sync -> Adam) improves the discriminator's task and keeps training
+   numerically healthy over dozens of epochs.
+2. LM training end-to-end: loss decreases on a learnable synthetic task.
+3. The sharding plan lowers on a tiny host mesh (miniature dry-run).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import pipeline, workflow
+from repro.core.ensemble import ensemble_response
+from repro.core.residuals import normalized_residuals
+from repro.core.sync import MODES, SyncConfig
+from repro.core.workflow import WorkflowConfig
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("mode", ["rma_arar_arar", "conv_arar"])
+def test_workflow_end_to_end_healthy(mode):
+    data = pipeline.make_reference_data(jax.random.PRNGKey(99), 5_000)
+    wcfg = WorkflowConfig(sync=SyncConfig(mode=mode, h=5),
+                          n_param_samples=16, events_per_sample=8,
+                          gen_lr=2e-4, disc_lr=5e-4)
+    state, hist = workflow.train_vmap(jax.random.PRNGKey(0), wcfg, 2, 2,
+                                      60, data, checkpoint_every=10)
+    # all finite
+    for leaf in jax.tree.leaves(state):
+        assert bool(jnp.all(jnp.isfinite(leaf.astype(jnp.float32)))), "NaN in state"
+    # generator moved and predictions stay in (0, 1)
+    noise = jax.random.normal(jax.random.PRNGKey(7), (64, 135))
+    p_hat, sigma = ensemble_response(state["gen"], noise)
+    assert float(jnp.min(p_hat)) > 0 and float(jnp.max(p_hat)) < 1
+    # discriminator learned something: loss improved from its first epochs
+    # (last value may bounce — adversarial training oscillates)
+    d = np.asarray(hist["d_loss"]).mean(axis=1)
+    assert d[-1] < d[0] and d.min() < 1.42, d
+
+
+def test_llm_training_reduces_loss():
+    from repro.data import make_batch
+    from repro.models import ModelConfig
+    from repro.training import TrainConfig, Trainer
+    cfg = ModelConfig("t", "dense", 2, 64, 4, 2, 128, 31, dtype="float32",
+                      attn_impl="naive")
+    tcfg = TrainConfig(lr=3e-3, warmup=5, total_steps=60)
+    trainer = Trainer(cfg, tcfg, jax.random.PRNGKey(0))
+    batch = make_batch(cfg, 4, 32, seed=1)     # overfit one batch
+    losses = []
+    for i in range(40):
+        trainer.state, m = trainer.step_fn(trainer.state, batch)
+        losses.append(float(m["loss"]))
+    assert losses[-1] < losses[0] * 0.7, losses[::10]
+
+
+def test_sagips_modes_registry_complete():
+    assert set(MODES) == {"ensemble", "allreduce", "conv_arar",
+                          "arar_arar", "rma_arar_arar", "dbtree"}
+
+
+@pytest.mark.slow
+def test_miniature_dryrun_on_host_mesh():
+    """The production lowering path works end-to-end on a 1-device mesh."""
+    from repro.configs import get_config
+    from repro.launch.dryrun import lower_combo
+    from repro.training import TrainConfig
+    mesh = jax.make_mesh((1, 1), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    cfg = get_config("tinyllama-1.1b", smoke=True)
+    import repro.configs as C
+    import repro.launch.dryrun as dr
+
+    # route the dry-run through the smoke config to keep the test cheap
+    orig = C.ARCHS["tinyllama-1.1b"].CONFIG
+    C.ARCHS["tinyllama-1.1b"].CONFIG = cfg
+    try:
+        combo = dr.lower_combo("tinyllama-1.1b", "train_4k", mesh,
+                               TrainConfig(), "single")
+        # full train_4k batch on one CPU is too large to *execute* but must
+        # lower + compile (ShapeDtypeStructs, no allocation)
+        compiled = combo["lowered"].compile()
+        assert compiled.cost_analysis() is not None
+    finally:
+        C.ARCHS["tinyllama-1.1b"].CONFIG = orig

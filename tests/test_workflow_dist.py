@@ -1,0 +1,60 @@
+"""Distributed-equivalence tests: the vmap rank simulator and the shard_map
+mesh backend must produce identical training trajectories for every mode.
+Runs in a subprocess with 8 forced host devices (jax pins the device count
+at first init, so the main pytest process keeps its single device)."""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+_CHILD = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import sys, json
+sys.path.insert(0, "src")
+import jax, jax.numpy as jnp
+from repro.core import pipeline, workflow
+from repro.core.workflow import WorkflowConfig
+from repro.core.sync import SyncConfig
+
+mesh = jax.make_mesh((2, 4), ("pod", "data"),
+                     axis_types=(jax.sharding.AxisType.Auto,)*2)
+data = pipeline.make_reference_data(jax.random.PRNGKey(42), 1000)
+out = {}
+for mode in ["allreduce", "conv_arar", "arar_arar", "rma_arar_arar", "ensemble", "dbtree"]:
+    wcfg = WorkflowConfig(sync=SyncConfig(mode=mode, h=2),
+                          n_param_samples=8, events_per_sample=4)
+    R = 8
+    state_v = workflow.init_state(jax.random.PRNGKey(0), R, wcfg)
+    sub_keys = jax.random.split(jax.random.PRNGKey(9), R)
+    dpr = jnp.stack([jnp.take(data, jax.random.permutation(k, 1000)[:500], axis=0)
+                     for k in sub_keys])
+    ef_v = workflow.make_epoch_fn_vmap(2, 4, wcfg)
+    sv = state_v
+    for _ in range(3):
+        sv, _ = ef_v(sv, dpr)
+    ef_s, shardings = workflow.make_epoch_fn_shard(mesh, wcfg)
+    ss = jax.device_put(state_v, shardings)
+    ds = jax.device_put(dpr, shardings)
+    for _ in range(3):
+        ss, _ = ef_s(ss, ds)
+    diff = max(float(jnp.max(jnp.abs(a - b)))
+               for a, b in zip(jax.tree.leaves(sv["gen"]),
+                               jax.tree.leaves(jax.device_get(ss["gen"]))))
+    out[mode] = diff
+print("RESULT " + json.dumps(out))
+"""
+
+
+@pytest.mark.slow
+def test_vmap_and_shard_backends_identical():
+    repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    res = subprocess.run([sys.executable, "-c", _CHILD], cwd=repo,
+                         capture_output=True, text=True, timeout=900)
+    line = [l for l in res.stdout.splitlines() if l.startswith("RESULT ")]
+    assert line, f"child failed:\n{res.stderr[-3000:]}"
+    diffs = json.loads(line[0][len("RESULT "):])
+    for mode, d in diffs.items():
+        assert d < 1e-6, f"{mode}: backends diverged by {d}"
