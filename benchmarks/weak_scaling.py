@@ -54,8 +54,8 @@ from repro.launch import hlo_cost
 R = int(sys.argv[1]); mode = sys.argv[2]; h = int(sys.argv[3])
 fuse = len(sys.argv) > 4 and sys.argv[4] == "fuse"
 n_outer = max(R // %d, 1); n_inner = min(R, %d)
-mesh = jax.make_mesh((n_outer, n_inner), ("pod", "data"),
-                     axis_types=(jax.sharding.AxisType.Auto,)*2)
+from repro.launch.mesh import make_mesh
+mesh = make_mesh((n_outer, n_inner), ("pod", "data"))
 wcfg = WorkflowConfig(sync=SyncConfig(mode=mode, h=h, fuse_tensors=fuse),
                       n_param_samples=64, events_per_sample=25)
 fn, shardings = workflow.make_epoch_fn_shard(mesh, wcfg)
@@ -124,6 +124,65 @@ def model_epoch_time(rep: dict, mode: str, h: int, t_compute: float,
     return t_compute + t_comm + LAT * n_ops
 
 
+def measure_fused_wall_time(ranks=(4, 8, 16), h=25, n_epochs=30,
+                            warmup=5, out_path=None):
+    """Measured (not modeled) per-epoch wall time, fused vs unfused ring
+    payload, on the vmap rank simulator of this host.
+
+    Seeds the repo's BENCH_*.json series: writes BENCH_weak_scaling.json at
+    the repo root (plus benchmarks/results/) with per-R epoch times and the
+    fused/unfused ratio, so future PRs can regress against it.
+    """
+    import time
+
+    import jax
+    import jax.numpy as jnp
+
+    sys.path.insert(0, os.path.join(os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))), "src"))
+    from repro.core import pipeline, workflow
+    from repro.core.sync import SyncConfig
+    from repro.core.workflow import WorkflowConfig
+
+    data = pipeline.make_reference_data(jax.random.PRNGKey(42), 2000)
+    rows = []
+    for R in ranks:
+        n_inner = min(R, GPUS_PER_NODE)
+        n_outer = max(R // n_inner, 1)
+        per_fuse = {}
+        for fuse in (False, True):
+            wcfg = WorkflowConfig(
+                sync=SyncConfig(mode="rma_arar_arar", h=h, fuse_tensors=fuse),
+                n_param_samples=32, events_per_sample=25)
+            state = workflow.init_state(jax.random.PRNGKey(0), R, wcfg)
+            dpr = jnp.stack([data[:1000]] * R)
+            fn = workflow.make_chunk_fn_vmap(n_outer, n_inner, wcfg, 1)
+            for _ in range(warmup):                     # compile + warm cache
+                state, m = fn(state, dpr)
+            jax.block_until_ready(m)
+            t0 = time.perf_counter()
+            for _ in range(n_epochs):
+                state, m = fn(state, dpr)
+            jax.block_until_ready(m)
+            per_fuse["fused" if fuse else "unfused"] = \
+                (time.perf_counter() - t0) / n_epochs
+        rows.append({"ranks": R, "epoch_s_unfused": per_fuse["unfused"],
+                     "epoch_s_fused": per_fuse["fused"],
+                     "fused_speedup": per_fuse["unfused"] / per_fuse["fused"]})
+        print(f"  R={R:4d} unfused {per_fuse['unfused']*1e3:8.2f} ms  "
+              f"fused {per_fuse['fused']*1e3:8.2f} ms  "
+              f"speedup {rows[-1]['fused_speedup']:.2f}x", flush=True)
+    payload = {"benchmark": "weak_scaling_fused_exchange",
+               "mode": "rma_arar_arar", "h": h, "n_epochs": n_epochs,
+               "backend": jax.default_backend(), "rows": rows}
+    save_result("weak_scaling_fusion", payload)
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    with open(out_path or os.path.join(root, "BENCH_weak_scaling.json"),
+              "w") as f:
+        json.dump(payload, f, indent=1)
+    return payload
+
+
 def run(ranks=(4, 8, 16, 32, 64, 128, 256, 400), h=1000,
         t_compute=0.05, n_epochs=100_000, disc_batch=102_400, quick=False):
     if quick:
@@ -156,5 +215,11 @@ if __name__ == "__main__":
     import argparse
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--fusion-wall-time", action="store_true",
+                    help="measure fused-vs-unfused per-epoch wall time "
+                         "(writes BENCH_weak_scaling.json)")
     a = ap.parse_args()
-    run(quick=a.quick)
+    if a.fusion_wall_time:
+        measure_fused_wall_time()
+    else:
+        run(quick=a.quick)

@@ -35,12 +35,20 @@ def main():
     ap.add_argument("--param-samples", type=int, default=64)
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--ckpt-every", type=int, default=500)
+    ap.add_argument("--staleness", type=int, default=1,
+                    help="RMA mailbox depth k (rma_arar_arar only)")
+    ap.add_argument("--no-fuse", action="store_true",
+                    help="disable the fused single-buffer ring payload")
+    ap.add_argument("--chunk", type=int, default=0,
+                    help="epochs per jitted lax.scan chunk "
+                         "(0: one chunk per report interval)")
     args = ap.parse_args()
 
     n_inner = min(args.inner, args.ranks)
     n_outer = args.ranks // n_inner
     wcfg = WorkflowConfig(
-        sync=SyncConfig(mode=args.mode, h=args.h),
+        sync=SyncConfig(mode=args.mode, h=args.h, staleness=args.staleness,
+                        fuse_tensors=not args.no_fuse),
         n_param_samples=args.param_samples, events_per_sample=25,
         gen_lr=2e-4, disc_lr=5e-4)
 
@@ -57,21 +65,36 @@ def main():
     data_per_rank = jnp.stack([
         jnp.take(data, jax.random.permutation(k, data.shape[0])[:n_sub], axis=0)
         for k in sub_keys])
-    epoch_fn = workflow.make_epoch_fn_vmap(n_outer, n_inner, wcfg)
+    report_every = max(args.epochs // 10, 1)
+    chunk = args.chunk if args.chunk > 0 else report_every
+    if args.ckpt_dir:
+        # chunk boundaries must land on the checkpoint cadence: clamp to
+        # the LARGEST divisor of --ckpt-every that fits, so no checkpoint
+        # epoch is skipped and the scan chunks stay as big as possible
+        chunk = max(d for d in range(1, min(chunk, args.ckpt_every) + 1)
+                    if args.ckpt_every % d == 0)
+    chunk = max(1, min(chunk, args.epochs))
+    # scan-chunked driver: one Python round-trip per `chunk` epochs
+    run = workflow.make_chunk_runner(n_outer, n_inner, wcfg)
 
     noise = jax.random.normal(jax.random.PRNGKey(7), (256, 135))
     t0 = time.time()
-    for e in range(args.epochs):
-        state, metrics = epoch_fn(state, data_per_rank)
-        if e % max(args.epochs // 10, 1) == 0 or e == args.epochs - 1:
+    for e, n in workflow.chunk_schedule(args.epochs, chunk):
+        state, metrics = run(state, data_per_rank, n)
+        done, last = e + n, e + n - 1
+        if last // report_every > (e - 1) // report_every \
+                or done == args.epochs:
             p_hat, sigma = ensemble_response(state["gen"], noise)
             r = np.abs(np.asarray(normalized_residuals(p_hat))).mean()
-            print(f"epoch {e:6d}  mean|r̂|={r:.4f}  "
-                  f"d_loss={float(np.asarray(metrics['d_loss']).mean()):.3f}  "
-                  f"g_loss={float(np.asarray(metrics['g_loss']).mean()):.3f}  "
-                  f"({time.time()-t0:.0f}s)", flush=True)
-        if args.ckpt_dir and (e % args.ckpt_every == 0 or e == args.epochs - 1):
-            save_checkpoint(args.ckpt_dir, e, {"gen": state["gen"]},
+            d_l = float(np.asarray(metrics["d_loss"][-1]).mean())
+            g_l = float(np.asarray(metrics["g_loss"][-1]).mean())
+            print(f"epoch {last:6d}  mean|r̂|={r:.4f}  d_loss={d_l:.3f}  "
+                  f"g_loss={g_l:.3f}  ({time.time()-t0:.0f}s)", flush=True)
+        # save after the first chunk (early restart point), then every
+        # --ckpt-every completed epochs, and at the end
+        if args.ckpt_dir and (e == 0 or done % args.ckpt_every == 0
+                              or done == args.epochs):
+            save_checkpoint(args.ckpt_dir, last, {"gen": state["gen"]},
                             metadata={"wall_s": time.time() - t0})
 
     p_hat, sigma = ensemble_response(state["gen"], noise)

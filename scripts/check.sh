@@ -1,0 +1,12 @@
+#!/usr/bin/env bash
+# Tier-1 gate — the exact invocation every PR must keep green (ROADMAP.md).
+#
+#   scripts/check.sh                 # full suite (what CI / the driver runs)
+#   scripts/check.sh -m "not slow"   # fast lane: skips the >1 s integration
+#                                    # tests (subprocess mesh equivalence,
+#                                    # end-to-end workflow convergence)
+#
+# Extra args pass straight through to pytest.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" python -m pytest -x -q "$@"

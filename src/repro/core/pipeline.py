@@ -48,11 +48,13 @@ def inverse_cdf(u, mu, s, k):
     return mu + s * jnp.log(u / (1.0 - u)) + k * (u - 0.5)
 
 
-def sample_events(params, u, impl: str = "jnp"):
+def sample_events(params, u, impl: str = "jnp", interpret=None):
     """params [K, 6] in (0,1); u [K, E, 2] uniform noise.
 
     Returns events [K*E, 2] — E events per parameter sample, observables
-    (y0, y1).  Differentiable w.r.t. params.
+    (y0, y1).  Differentiable w.r.t. params.  `interpret` (pallas impl
+    only): None auto-selects per backend — compiled Mosaic kernel on TPU,
+    interpreter elsewhere.
     """
     K, E, _ = u.shape
     mu0 = _affine(params[:, 0], *_MU_RANGE)
@@ -63,8 +65,8 @@ def sample_events(params, u, impl: str = "jnp"):
     k1 = _affine(params[:, 5], *_K_RANGE)
     if impl == "pallas":
         from repro.kernels import ops as kops
-        y0 = kops.inverse_cdf(u[:, :, 0], mu0, s0, k0)
-        y1 = kops.inverse_cdf(u[:, :, 1], mu1, s1, k1)
+        y0 = kops.inverse_cdf(u[:, :, 0], mu0, s0, k0, interpret)
+        y1 = kops.inverse_cdf(u[:, :, 1], mu1, s1, k1, interpret)
     else:
         y0 = inverse_cdf(u[:, :, 0], mu0[:, None], s0[:, None], k0[:, None])
         y1 = inverse_cdf(u[:, :, 1], mu1[:, None], s1[:, None], k1[:, None])
@@ -82,11 +84,11 @@ def make_reference_data(key, n_events: int, params=None):
 
 def synthetic_events(gen_params, key, n_param_samples: int = PARAM_SAMPLES,
                      events_per_sample: int = EVENTS_PER_SAMPLE,
-                     impl: str = "jnp"):
+                     impl: str = "jnp", interpret=None):
     """Full generator->pipeline pass. Returns (events [K*E, 2], params [K, 6])."""
     from . import gan
     k1, k2 = jax.random.split(key)
     noise = jax.random.normal(k1, (n_param_samples, gan.NOISE_DIM))
     params = gan.generate_params(gen_params, noise)
     u = jax.random.uniform(k2, (n_param_samples, events_per_sample, 2))
-    return sample_events(params, u, impl=impl), params
+    return sample_events(params, u, impl=impl, interpret=interpret), params

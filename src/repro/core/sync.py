@@ -7,7 +7,17 @@ window: the buffer a rank's ring predecessor deposited on an earlier epoch
 (staleness >= 1) — reads never block on the producer, which is exactly the
 observable semantics of the paper's one-sided MPI windows (DESIGN.md §2).
 
-Modes:
+Sync-mode table:
+
+    mode            ring payload      mailbox   outer ring   combine
+    --------------  ----------------  --------  -----------  ----------
+    ensemble        none              no        no           —
+    allreduce       full mean reduce  no        no           mean
+    conv_arar       global ring       no        no           sum
+    arar_arar       inner ring        no        every h      sum
+    rma_arar_arar   inner ring        depth k   every h      sum
+    dbtree          log2(R) stages    no        no           mean
+
     ensemble        no communication (§IV-A)
     allreduce       synchronous mean all-reduce — the horovod baseline
     conv_arar       Tab. II "ARAR": global ring, no grouping, every epoch
@@ -15,6 +25,28 @@ Modes:
                     (rank-0 of each inner group) every h epochs
     rma_arar_arar   Tab. II "RMA-ARAR-ARAR": inner exchange reads the stale
                     RMA mailbox; outer ring every h epochs
+    dbtree          paper §VII future work via [18]: recursive-doubling tree
+
+Staleness semantics (`SyncConfig.staleness`, rma_arar_arar only): the RMA
+mailbox is a circular buffer of depth k >= 1.  At epoch e a rank *reads*
+slot e % k — the deposit its ring predecessor made at epoch e - k, i.e.
+gradients exactly `staleness` epochs old — and then *deposits* this epoch's
+fresh ring-shifted gradients into the same slot for the read at e + k.  The
+paper runs k = 1 (read last epoch's deposit); k > 1 widens the overlap
+window so slower ranks never block faster ones across k epochs of skew.
+Depth-k mailboxes are meaningless for the other modes, so `SyncConfig`
+raises on staleness > 1 outside rma_arar_arar.
+
+Tensor fusion (`SyncConfig.fuse_tensors`, default ON): the paper's §VII
+names fusing the ring payload into ONE buffer per exchange as the next
+scaling step.  All ring modes (conv_arar / arar_arar / rma_arar_arar /
+dbtree) concatenate every mask-selected leaf into a single flat payload,
+run the exchange on that one buffer, and scatter the result back — one
+collective per epoch instead of one per weight tensor.  The layout is a
+precomputed `FusionSpec` (built once at driver-construction time, see
+`workflow.make_epoch_fn_vmap` / `make_epoch_fn_shard`), so the hot path
+never re-derives offsets leaf-by-leaf.  Fused and unfused paths are
+bitwise-identical on `VmapComm` (pure elementwise permutes + adds).
 
 Per §V-C only *weight* gradients ride the ring; bias gradients stay local
 (pass `mask` from `gan.weight_mask` — leaves where mask=False skip sync).
@@ -24,15 +56,19 @@ Per Algorithm 1 the combine is a *sum* (g_i <- g_i + g_{i-1}); `combine=
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
+import math
+from typing import Any, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
-from .ring import Comm
+from .ring import Comm, VmapComm
 
 MODES = ("ensemble", "allreduce", "conv_arar", "arar_arar", "rma_arar_arar",
          "dbtree")
+
+# modes whose exchange rides the ring and therefore benefits from fusion
+RING_MODES = ("conv_arar", "arar_arar", "rma_arar_arar", "dbtree")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -40,35 +76,83 @@ class SyncConfig:
     mode: str = "arar_arar"
     h: int = 1000                  # outer-group update frequency (Tab. I)
     combine: str = "sum"           # Algorithm 1 uses sum
-    staleness: int = 1             # RMA mailbox depth (paper: 1)
-    fuse_tensors: bool = False     # paper §VII future work: fuse the ring
-    #                                payload into ONE buffer per exchange
+    staleness: int = 1             # RMA mailbox depth k (paper: 1)
+    fuse_tensors: bool = True      # paper §VII: fuse the ring payload into
+    #                                ONE buffer per exchange (default ON)
+
+    def __post_init__(self):
+        if self.mode not in MODES:
+            raise ValueError(f"unknown sync mode {self.mode!r}")
+        if self.staleness < 1:
+            raise ValueError(f"staleness must be >= 1, got {self.staleness}")
+        if self.staleness > 1 and self.mode != "rma_arar_arar":
+            raise ValueError(
+                "staleness > 1 (depth-k RMA mailbox) is only meaningful for "
+                f"mode='rma_arar_arar', got mode={self.mode!r}")
 
 
-def _flatten_masked(tree, mask, stacked: bool):
-    """Concatenate mask-selected leaves into one buffer (tensor fusion).
-    stacked=True keeps the leading simulated-rank axis intact."""
-    leaves = []
-    for m, g in zip(jax.tree.leaves(mask), jax.tree.leaves(tree)):
-        if m:
-            leaves.append(g.reshape(g.shape[0], -1) if stacked
-                          else g.reshape(-1))
-    axis = 1 if stacked else 0
-    return jnp.concatenate(leaves, axis=axis)
+# ----------------------------------------------------------------------------
+# tensor fusion
 
 
-def _unflatten_masked(vec, tree, mask, stacked: bool):
-    out = []
-    off = 0
-    for m, g in zip(jax.tree.leaves(mask), jax.tree.leaves(tree)):
-        if m:
-            n = g.size // (g.shape[0] if stacked else 1)
-            sl = vec[:, off:off + n] if stacked else vec[off:off + n]
-            out.append(sl.reshape(g.shape).astype(g.dtype))
-            off += n
-        else:
-            out.append(g)
-    return jax.tree.unflatten(jax.tree.structure(tree), out)
+@dataclasses.dataclass(frozen=True)
+class _LeafSlot:
+    masked: bool
+    shape: Tuple[int, ...]         # per-rank trailing shape
+    size: int
+    offset: int                    # column offset into the flat payload
+    dtype: Any
+
+
+@dataclasses.dataclass(frozen=True)
+class FusionSpec:
+    """Precomputed flat-payload layout for one pytree + mask.
+
+    Built ONCE per driver (from an abstract example of the per-rank gradient
+    tree), then reused every epoch: `flatten` concatenates the mask-selected
+    leaves into one [D] (or stacked [R, D]) buffer, `unflatten` scatters the
+    exchanged buffer back using the cached offsets — no leaf-by-leaf
+    re-derivation inside the jitted hot path.
+    """
+    treedef: Any
+    slots: Tuple[_LeafSlot, ...]
+    total: int                     # D = sum of masked per-rank leaf sizes
+
+    @classmethod
+    def build(cls, example, mask) -> "FusionSpec":
+        """`example` is a per-rank pytree (arrays or ShapeDtypeStructs,
+        no leading rank axis); `mask` a matching bool pytree."""
+        treedef = jax.tree.structure(example)
+        slots, off = [], 0
+        for m, g in zip(jax.tree.leaves(mask), jax.tree.leaves(example)):
+            n = math.prod(g.shape) if g.shape else 1
+            slots.append(_LeafSlot(bool(m), tuple(g.shape), n,
+                                   off if m else -1, g.dtype))
+            if m:
+                off += n
+        return cls(treedef, tuple(slots), off)
+
+    def flatten(self, tree, stacked: bool):
+        """Concatenate mask-selected leaves into the flat ring payload.
+        stacked=True keeps the leading simulated-rank axis intact."""
+        parts = [
+            (g.reshape(g.shape[0], -1) if stacked else g.reshape(-1))
+            for s, g in zip(self.slots, jax.tree.leaves(tree)) if s.masked]
+        return jnp.concatenate(parts, axis=1 if stacked else 0)
+
+    def unflatten(self, vec, tree, stacked: bool):
+        """Scatter the exchanged payload back; unmasked leaves pass through
+        from `tree` untouched."""
+        out = []
+        for s, g in zip(self.slots, jax.tree.leaves(tree)):
+            if s.masked:
+                sl = vec[:, s.offset:s.offset + s.size] if stacked \
+                    else vec[s.offset:s.offset + s.size]
+                shape = (g.shape[0],) + s.shape if stacked else s.shape
+                out.append(sl.reshape(shape).astype(s.dtype))
+            else:
+                out.append(g)
+        return jax.tree.unflatten(self.treedef, out)
 
 
 def _comb(a, b, combine):
@@ -83,8 +167,19 @@ def _masked(mask, synced, local):
     return jax.tree.map(lambda m, s, l: s if m else l, mask, synced, local)
 
 
-def init_mailbox(grads_like):
-    return jax.tree.map(jnp.zeros_like, grads_like)
+def init_mailbox(grads_like, staleness: int = 1, stacked: bool = False):
+    """Zero RMA mailbox shaped like `grads_like`.
+
+    staleness k > 1 adds a circular-buffer depth axis of size k per leaf —
+    at position 1 when the tree is rank-stacked ([R, k, ...]), else leading
+    ([k, ...]).  k = 1 keeps the historical flat layout (no depth axis).
+    """
+    if staleness <= 1:
+        return jax.tree.map(jnp.zeros_like, grads_like)
+    axis = 1 if stacked else 0
+    return jax.tree.map(
+        lambda x: jnp.zeros(x.shape[:axis] + (staleness,) + x.shape[axis:],
+                            x.dtype), grads_like)
 
 
 def _outer_exchange(comm: Comm, g, epoch, h, combine):
@@ -98,20 +193,54 @@ def _outer_exchange(comm: Comm, g, epoch, h, combine):
 
 
 def sync_gradients(comm: Comm, cfg: SyncConfig, grads, mailbox, epoch,
-                   mask=None):
-    """Returns (synced_grads, new_mailbox)."""
-    if cfg.fuse_tensors and mask is not None and \
-            cfg.mode in ("conv_arar", "arar_arar", "rma_arar_arar", "dbtree"):
-        # paper §VII future work: one fused ring payload instead of one
-        # transfer per weight tensor
-        from .ring import VmapComm
-        stacked = isinstance(comm, VmapComm)
-        fg = {"w": _flatten_masked(grads, mask, stacked)}
-        fmb = {"w": _flatten_masked(mailbox, mask, stacked)}
-        synced, new_mb = _sync_core(comm, cfg, fg, fmb, epoch, {"w": True})
-        return (_unflatten_masked(synced["w"], grads, mask, stacked),
-                _unflatten_masked(new_mb["w"], mailbox, mask, stacked))
-    return _sync_core(comm, cfg, grads, mailbox, epoch, mask)
+                   mask=None, spec: Optional[FusionSpec] = None):
+    """Returns (synced_grads, new_mailbox).
+
+    `spec` is the cached FusionSpec for the fused path; when omitted (ad-hoc
+    calls, tests) it is rebuilt from `grads`/`mask` on the fly.  `mailbox`
+    carries the depth-k circular buffer when cfg.staleness > 1 (see
+    `init_mailbox`); the depth axis sits after the rank axis on the stacked
+    `VmapComm` layout and leads on the per-rank `ShardComm` layout.
+    """
+    stacked = isinstance(comm, VmapComm)
+
+    # -- depth-k mailbox: read the slot deposited `staleness` epochs ago -----
+    depth = cfg.staleness if cfg.mode == "rma_arar_arar" else 1
+    if depth > 1:
+        axis = 1 if stacked else 0
+        slot = jnp.mod(epoch, depth)
+        mb_slot = jax.tree.map(
+            lambda x: jax.lax.dynamic_index_in_dim(x, slot, axis,
+                                                   keepdims=False), mailbox)
+    else:
+        mb_slot = mailbox
+
+    fuse = cfg.fuse_tensors and mask is not None and cfg.mode in RING_MODES
+    if fuse and spec is None:
+        example = jax.tree.map(
+            lambda x: jax.ShapeDtypeStruct(x.shape[1:], x.dtype)
+            if stacked else jax.ShapeDtypeStruct(x.shape, x.dtype), grads)
+        spec = FusionSpec.build(example, mask)
+    if fuse and spec.total > 0:     # all-False mask: nothing rides the ring
+        # paper §VII: one fused ring payload instead of one transfer per
+        # weight tensor
+        fg = {"w": spec.flatten(grads, stacked)}
+        fmb = {"w": spec.flatten(mb_slot, stacked)}
+        fsynced, fnew_mb = _sync_core(comm, cfg, fg, fmb, epoch, {"w": True})
+        synced = spec.unflatten(fsynced["w"], grads, stacked)
+        new_deposit = spec.unflatten(fnew_mb["w"], mb_slot, stacked)
+    else:
+        synced, new_deposit = _sync_core(comm, cfg, grads, mb_slot, epoch,
+                                         mask)
+
+    # -- depth-k mailbox: deposit this epoch's fresh grads into the slot -----
+    if depth > 1:
+        new_mailbox = jax.tree.map(
+            lambda full, new: jax.lax.dynamic_update_index_in_dim(
+                full, new.astype(full.dtype), slot, axis),
+            mailbox, new_deposit)
+        return synced, new_mailbox
+    return synced, new_deposit
 
 
 def _sync_core(comm: Comm, cfg: SyncConfig, grads, mailbox, epoch,
@@ -129,11 +258,10 @@ def _sync_core(comm: Comm, cfg: SyncConfig, grads, mailbox, epoch,
         # paper §VII future work (via [18]): log2(R)-stage tree exchange —
         # a FULL reduction per epoch in ppermute pairs (recursive doubling,
         # the lock-step SPMD realization of the double-binary-tree schedule)
-        import math as _math
         R = comm.n_ranks
         assert R & (R - 1) == 0, "dbtree needs a power-of-two rank count"
         synced = grads
-        for stage in range(int(_math.log2(R))):
+        for stage in range(int(math.log2(R))):
             recv = comm.recv_hypercube(synced, stage)
             synced = jax.tree.map(lambda a, b: a + b, synced, recv)
         # tree reduction accumulates the global SUM; normalize to the mean
@@ -148,8 +276,10 @@ def _sync_core(comm: Comm, cfg: SyncConfig, grads, mailbox, epoch,
     elif mode == "rma_arar_arar":
         # read the stale mailbox (never blocks on the producer) ...
         synced = jax.tree.map(lambda a, b: _comb(a, b, combine), grads, mailbox)
-        # ... and deposit this epoch's *fresh local* grads for the successor
-        new_mailbox = comm.recv_ring_inner(grads)
+        # ... and deposit this epoch's *fresh local* grads for the successor.
+        # Only mask-selected leaves ride the ring (§V-C): unmasked mailbox
+        # slots keep their old (never-read) contents.
+        new_mailbox = _masked(mask, comm.recv_ring_inner(grads), mailbox)
     else:
         raise ValueError(f"unknown sync mode {mode!r}")
 

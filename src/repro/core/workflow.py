@@ -37,6 +37,7 @@ class WorkflowConfig:
     gen_lr: float = 1e-5                                # §V-A
     disc_lr: float = 1e-4
     sampler_impl: str = "jnp"                           # 'jnp' | 'pallas'
+    sampler_interpret: Optional[bool] = None            # None: auto per backend
 
     @property
     def disc_batch(self) -> int:
@@ -50,7 +51,7 @@ def init_rank_state(key, wcfg: WorkflowConfig):
     disc_p = gan.init_discriminator(kd)
     gen_opt = adam(wcfg.gen_lr).init(gen_p)
     disc_opt = adam(wcfg.disc_lr).init(disc_p)
-    mailbox = sync_lib.init_mailbox(gen_p)
+    mailbox = sync_lib.init_mailbox(gen_p, staleness=wcfg.sync.staleness)
     return {
         "gen": gen_p, "disc": disc_p,
         "gen_opt": gen_opt, "disc_opt": disc_opt,
@@ -91,7 +92,7 @@ def rank_grads(state, data_local, wcfg: WorkflowConfig):
 
     fake, pred_params = pipeline.synthetic_events(
         state["gen"], k_gen, wcfg.n_param_samples, wcfg.events_per_sample,
-        impl=wcfg.sampler_impl)
+        impl=wcfg.sampler_impl, interpret=wcfg.sampler_interpret)
 
     # --- discriminator update (local, immediate — §IV-B) ---------------------
     d_loss, d_grads = jax.value_and_grad(gan.disc_loss)(
@@ -103,7 +104,7 @@ def rank_grads(state, data_local, wcfg: WorkflowConfig):
     def g_objective(gen_p):
         fake_ev, _ = pipeline.synthetic_events(
             gen_p, k_gen, wcfg.n_param_samples, wcfg.events_per_sample,
-            impl=wcfg.sampler_impl)
+            impl=wcfg.sampler_impl, interpret=wcfg.sampler_interpret)
         return gan.gen_loss(state["disc"], fake_ev)
 
     g_loss, g_grads = jax.value_and_grad(g_objective)(state["gen"])
@@ -129,22 +130,58 @@ def rank_apply(state, synced_grads, new_mailbox, wcfg: WorkflowConfig):
 # drivers
 
 
-def make_epoch_fn_vmap(n_outer: int, n_inner: int, wcfg: WorkflowConfig):
-    """Epoch step over stacked state [R, ...]; data_per_rank [R, N, 2]."""
-    comm = VmapComm(n_outer, n_inner)
-    mask = gan.weight_mask(gan.init_generator(jax.random.PRNGKey(0)))
+def _gen_example():
+    """Abstract per-rank generator pytree (shapes/dtypes only, no compute)."""
+    return jax.eval_shape(gan.init_generator, jax.random.PRNGKey(0))
 
+
+def _mask_and_spec():
+    """Weight mask + cached FusionSpec, built once per driver construction
+    (never re-derived leaf-by-leaf inside the jitted epoch)."""
+    example = _gen_example()
+    mask = gan.weight_mask(example)
+    return mask, sync_lib.FusionSpec.build(example, mask)
+
+
+def _epoch_body_vmap(comm, mask, spec, wcfg: WorkflowConfig):
     def epoch(state, data_per_rank):
         new_state, g_grads, metrics = jax.vmap(
             lambda s, d: rank_grads(s, d, wcfg))(state, data_per_rank)
         epoch_idx = new_state["epoch"][0]
         synced, new_mailbox = sync_lib.sync_gradients(
-            comm, wcfg.sync, g_grads, new_state["mailbox"], epoch_idx, mask)
+            comm, wcfg.sync, g_grads, new_state["mailbox"], epoch_idx, mask,
+            spec=spec)
         out = jax.vmap(lambda s, g, m: rank_apply(s, g, m, wcfg))(
             new_state, synced, new_mailbox)
         return out, metrics
+    return epoch
 
-    return jax.jit(epoch)
+
+def make_epoch_fn_vmap(n_outer: int, n_inner: int, wcfg: WorkflowConfig):
+    """Epoch step over stacked state [R, ...]; data_per_rank [R, N, 2]."""
+    comm = VmapComm(n_outer, n_inner)
+    mask, spec = _mask_and_spec()
+    return jax.jit(_epoch_body_vmap(comm, mask, spec, wcfg))
+
+
+def make_chunk_fn_vmap(n_outer: int, n_inner: int, wcfg: WorkflowConfig,
+                       chunk: int):
+    """`chunk` epochs fused into ONE jitted lax.scan — the multi-epoch
+    driver stops round-tripping to Python per epoch.
+
+    Returns fn(state, data_per_rank) -> (state, metrics) with every metric
+    leaf gaining a leading [chunk] axis (one row per epoch in the chunk).
+    """
+    comm = VmapComm(n_outer, n_inner)
+    mask, spec = _mask_and_spec()
+    epoch = _epoch_body_vmap(comm, mask, spec, wcfg)
+
+    def chunked(state, data_per_rank):
+        def body(s, _):
+            return epoch(s, data_per_rank)
+        return jax.lax.scan(body, state, xs=None, length=chunk)
+
+    return jax.jit(chunked)
 
 
 def make_epoch_fn_shard(mesh, wcfg: WorkflowConfig,
@@ -160,7 +197,7 @@ def make_epoch_fn_shard(mesh, wcfg: WorkflowConfig,
     n_outer = mesh.shape[outer_axis] if outer_axis in mesh.axis_names else 1
     n_inner = mesh.shape[inner_axis]
     comm = ShardComm(n_outer, n_inner, outer_axis, inner_axis)
-    mask = gan.weight_mask(gan.init_generator(jax.random.PRNGKey(0)))
+    mask, fspec = _mask_and_spec()
 
     def epoch(state, data_local):
         # leading axis has local size 1 inside shard_map
@@ -168,27 +205,60 @@ def make_epoch_fn_shard(mesh, wcfg: WorkflowConfig,
         new_state, g_grads, metrics = rank_grads(state1, data_local[0], wcfg)
         synced, new_mailbox = sync_lib.sync_gradients(
             comm, wcfg.sync, g_grads, new_state["mailbox"], new_state["epoch"],
-            mask)
+            mask, spec=fspec)
         out = rank_apply(new_state, synced, new_mailbox, wcfg)
         out = jax.tree.map(lambda x: x[None], out)
         metrics = jax.tree.map(lambda x: x[None], metrics)
         return out, metrics
 
     spec = P(axes)
-    fn = jax.shard_map(epoch, mesh=mesh, in_specs=(spec, spec),
-                       out_specs=(spec, spec), check_vma=False)
+    from ..parallel.sharding import shard_map
+    fn = shard_map(epoch, mesh, in_specs=(spec, spec),
+                   out_specs=(spec, spec))
     shardings = NamedSharding(mesh, spec)
     return jax.jit(fn), shardings
 
 
+def chunk_schedule(n_epochs: int, chunk: int):
+    """Yield (start_epoch, n) per scan chunk covering [0, n_epochs)."""
+    e = 0
+    while e < n_epochs:
+        n = min(chunk, n_epochs - e)
+        yield e, n
+        e += n
+
+
+def make_chunk_runner(n_outer: int, n_inner: int, wcfg: WorkflowConfig):
+    """Compiled-chunk cache: run(state, data_per_rank, n) scans n epochs.
+
+    Scan length is static, so each distinct n compiles once (a schedule
+    from `chunk_schedule` produces at most two lengths).
+    """
+    fns = {}
+
+    def run(state, data_per_rank, n: int):
+        if n not in fns:
+            fns[n] = make_chunk_fn_vmap(n_outer, n_inner, wcfg, n)
+        return fns[n](state, data_per_rank)
+
+    return run
+
+
 def train_vmap(key, wcfg: WorkflowConfig, n_outer: int, n_inner: int,
-               n_epochs: int, data, checkpoint_every: int = 0):
+               n_epochs: int, data, checkpoint_every: int = 0,
+               chunk: int = 0):
     """Convergence-study driver: R = n_outer*n_inner simulated ranks.
 
     `data` [N, 2] is the full reference set; the master rank "distributes"
     a copy to every rank (§IV-B: each rank has its own copy, analyzes a
     random fraction).  Returns (final_state, history dict of stacked
     metrics at each recorded epoch).
+
+    Epochs run `chunk` at a time inside a single jitted `lax.scan`
+    (default: `checkpoint_every`, else min(n_epochs, 64)), so the driver
+    crosses the Python/device boundary once per chunk instead of once per
+    epoch.  Recorded history is identical to the per-epoch driver: epochs
+    where `e % checkpoint_every == 0` plus the final epoch.
     """
     R = n_outer * n_inner
     key, k_sub = jax.random.split(key)
@@ -199,13 +269,20 @@ def train_vmap(key, wcfg: WorkflowConfig, n_outer: int, n_inner: int,
     data_per_rank = jnp.stack([
         jnp.take(data, jax.random.permutation(k, data.shape[0])[:n_sub], axis=0)
         for k in sub_keys])
-    epoch_fn = make_epoch_fn_vmap(n_outer, n_inner, wcfg)
+
+    if chunk <= 0:
+        chunk = checkpoint_every if checkpoint_every > 0 else min(n_epochs, 64)
+    chunk = max(1, min(chunk, n_epochs))
+    run = make_chunk_runner(n_outer, n_inner, wcfg)
 
     hist = []
-    for e in range(n_epochs):
-        state, metrics = epoch_fn(state, data_per_rank)
-        if checkpoint_every and (e % checkpoint_every == 0
-                                 or e == n_epochs - 1):
-            hist.append(jax.tree.map(lambda x: jnp.asarray(x), metrics))
+    for e, n in chunk_schedule(n_epochs, chunk):
+        state, metrics = run(state, data_per_rank, n)
+        if checkpoint_every:
+            for j in range(n):
+                ge = e + j
+                if ge % checkpoint_every == 0 or ge == n_epochs - 1:
+                    hist.append(jax.tree.map(lambda x: jnp.asarray(x[j]),
+                                             metrics))
     history = jax.tree.map(lambda *xs: jnp.stack(xs), *hist) if hist else {}
     return state, history

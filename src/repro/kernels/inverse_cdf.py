@@ -29,10 +29,22 @@ def _icdf_kernel(u_ref, mu_ref, s_ref, k_ref, y_ref):
     y_ref[...] = y.astype(y_ref.dtype)
 
 
+def interpret_default() -> bool:
+    """Interpret-mode only off-TPU: on a TPU runtime the kernel compiles to
+    a real Mosaic kernel.  (Defaulting to interpret=True everywhere was the
+    hot-path bug that kept the "Pallas" sampler from ever compiling.)"""
+    return jax.default_backend() != "tpu"
+
+
 @functools.partial(jax.jit, static_argnames=("block_k", "block_e", "interpret"))
 def inverse_cdf(u, mu, s, k, block_k: int = 256, block_e: int = 128,
-                interpret: bool = True):
-    """u [K, E] uniforms; mu/s/k [K] per-row parameters. Returns y [K, E]."""
+                interpret: bool | None = None):
+    """u [K, E] uniforms; mu/s/k [K] per-row parameters. Returns y [K, E].
+
+    interpret=None auto-selects: compiled Mosaic kernel on TPU, interpreter
+    elsewhere (CPU hosts cannot lower Mosaic)."""
+    if interpret is None:
+        interpret = interpret_default()
     K, E = u.shape
     bk, be = min(block_k, K), min(block_e, E)
     padK = (-K) % bk

@@ -2,8 +2,9 @@
 
 Model code calls these (when `attn_impl == 'pallas'` / `sampler_impl ==
 'pallas'`); the layout adapters translate between model-layout tensors and
-kernel-layout tensors.  `interpret=True` everywhere on this CPU host — flip
-via REPRO_PALLAS_INTERPRET=0 on a real TPU.
+kernel-layout tensors.  Interpret mode auto-selects per backend: compiled
+Mosaic kernels on TPU, interpreter elsewhere (CPU cannot lower Mosaic).
+Override with REPRO_PALLAS_INTERPRET=0/1.
 
 Autodiff: each kernel carries a custom_vjp.  Forward runs the Pallas
 kernel; backward of `inverse_cdf` uses the closed-form partials, while the
@@ -25,7 +26,14 @@ from .ssd_scan import ssd_scan as _ssd
 from .inverse_cdf import inverse_cdf as _icdf
 from . import ref
 
-INTERPRET = os.environ.get("REPRO_PALLAS_INTERPRET", "1") != "0"
+def _interpret() -> bool:
+    """Resolved lazily so importing this module never initializes the jax
+    backend (the dry-run sets XLA_FLAGS before any jax device touch)."""
+    env = os.environ.get("REPRO_PALLAS_INTERPRET")
+    if env is not None:
+        return env != "0"
+    from .inverse_cdf import interpret_default
+    return interpret_default()
 
 
 # ----------------------------------------------------------------------------
@@ -39,7 +47,7 @@ def flash_attention(q, k, v, causal: bool = True, window: Optional[int] = None):
     qk = q.reshape(B, S, KV * G, hd).transpose(0, 2, 1, 3)   # [B,H,S,hd]
     kk = k.transpose(0, 2, 1, 3)                             # [B,KV,S,hd]
     vk = v.transpose(0, 2, 1, 3)
-    o = _flash(qk, kk, vk, causal=causal, window=window, interpret=INTERPRET)
+    o = _flash(qk, kk, vk, causal=causal, window=window, interpret=_interpret())
     return o.transpose(0, 2, 1, 3).reshape(B, S, KV, G, hd)
 
 
@@ -72,7 +80,7 @@ flash_attention.defvjp(_flash_fwd, _flash_bwd)
 @functools.partial(jax.custom_vjp, nondiff_argnums=(5,))
 def ssd_scan(x, dt, A, Bc, Cc, chunk: int = 64):
     """Model layout (see repro.models.ssm.run_ssm)."""
-    return _ssd(x, dt, A, Bc, Cc, chunk=chunk, interpret=INTERPRET)
+    return _ssd(x, dt, A, Bc, Cc, chunk=chunk, interpret=_interpret())
 
 
 def _ssd_fwd(x, dt, A, Bc, Cc, chunk):
@@ -92,17 +100,19 @@ ssd_scan.defvjp(_ssd_fwd, _ssd_bwd)
 # inverse CDF sampler
 
 
-@jax.custom_vjp
-def inverse_cdf(u, mu, s, k):
-    """Pipeline layout: u [K,E]; mu/s/k [K]."""
-    return _icdf(u, mu, s, k, interpret=INTERPRET)
+@functools.partial(jax.custom_vjp, nondiff_argnums=(4,))
+def inverse_cdf(u, mu, s, k, interpret: Optional[bool] = None):
+    """Pipeline layout: u [K,E]; mu/s/k [K].  interpret=None auto-selects
+    per backend (env override via REPRO_PALLAS_INTERPRET)."""
+    return _icdf(u, mu, s, k,
+                 interpret=_interpret() if interpret is None else interpret)
 
 
-def _icdf_fwd(u, mu, s, k):
-    return inverse_cdf(u, mu, s, k), (u, s, k)
+def _icdf_fwd(u, mu, s, k, interpret):
+    return inverse_cdf(u, mu, s, k, interpret), (u, s, k)
 
 
-def _icdf_bwd(res, g):
+def _icdf_bwd(interpret, res, g):
     u, s, k = res
     uc = jnp.clip(u.astype(jnp.float32), 1e-6, 1 - 1e-6)
     gf = g.astype(jnp.float32)

@@ -159,8 +159,19 @@ def forward(params, batch, cfg: ModelConfig):
         body = jax.checkpoint(period_body, policy=policy)
     else:
         body = period_body
-    (x, aux), _ = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)),
-                               params["periods"])
+    from ..parallel.sharding import flag
+    if flag("unroll_periods"):
+        # old XLA (jax 0.4.x) cannot partition a while loop (lax.scan) whose
+        # body touches auto-sharded operands inside a partial-manual
+        # shard_map region — unroll the period loop there instead
+        carry = (x, jnp.zeros((), jnp.float32))
+        for i in range(n_periods):
+            carry, _ = body(carry, jax.tree.map(lambda v: v[i],
+                                                params["periods"]))
+        x, aux = carry
+    else:
+        (x, aux), _ = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)),
+                                   params["periods"])
     x = layers.rms_norm(x, params["final_norm"], cfg.norm_eps)
     logits = unembed(params, x, cfg)
     return shard(logits, "batch", None, "vocab"), aux
@@ -177,7 +188,15 @@ def loss_fn(params, batch, cfg: ModelConfig):
     else:
         logits_, labels_, mask_ = logits, labels, mask
     logp = jax.nn.log_softmax(logits_.astype(jnp.float32), axis=-1)
-    nll = -jnp.take_along_axis(logp, labels_[..., None], axis=-1)[..., 0]
+    from ..parallel.sharding import flag
+    if flag("embed_onehot"):
+        # gather-free NLL for partial-manual shard_map regions: XLA's SPMD
+        # partitioner cannot partition take_along_axis (fwd gather / bwd
+        # scatter) under manual subaxes, same constraint as _lookup above
+        oh = jax.nn.one_hot(labels_, logp.shape[-1], dtype=logp.dtype)
+        nll = -(oh * logp).sum(axis=-1)
+    else:
+        nll = -jnp.take_along_axis(logp, labels_[..., None], axis=-1)[..., 0]
     denom = jnp.maximum(mask_.sum(), 1.0)
     ce = (nll * mask_).sum() / denom
     loss = ce + cfg.router_aux_coef * aux

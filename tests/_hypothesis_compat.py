@@ -1,0 +1,88 @@
+"""Minimal offline stand-in for the `hypothesis` property-testing API.
+
+The test image has no network access and no `hypothesis` wheel, which used
+to kill collection of five test modules at import time.  This shim covers
+exactly the surface those tests use — `given`, `settings`, and the
+`strategies` constructors `integers` / `floats` / `sampled_from` /
+`booleans` — backed by *seeded* `random.Random` draws, so every run
+replays the same examples (deterministic, unlike real hypothesis's
+database-driven shrinking, which we do not attempt).
+
+Usage (the modules fall back automatically):
+
+    try:
+        from hypothesis import given, settings, strategies as st
+    except ImportError:
+        from _hypothesis_compat import given, settings, strategies as st
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import random
+import zlib
+
+
+class _Strategy:
+    def __init__(self, draw):
+        self._draw = draw
+
+    def example(self, rng: random.Random):
+        return self._draw(rng)
+
+
+class strategies:
+    """Namespace mirroring `hypothesis.strategies` (imported `as st`)."""
+
+    @staticmethod
+    def integers(min_value, max_value):
+        return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+    @staticmethod
+    def floats(min_value, max_value):
+        def draw(rng):
+            # hit the endpoints occasionally — cheap boundary coverage
+            r = rng.random()
+            if r < 0.05:
+                return float(min_value)
+            if r < 0.10:
+                return float(max_value)
+            return rng.uniform(min_value, max_value)
+        return _Strategy(draw)
+
+    @staticmethod
+    def sampled_from(elements):
+        elements = list(elements)
+        return _Strategy(lambda rng: rng.choice(elements))
+
+    @staticmethod
+    def booleans():
+        return _Strategy(lambda rng: rng.random() < 0.5)
+
+
+def settings(max_examples: int = 10, deadline=None, **_kw):
+    """Decorator recording the example budget on the test function."""
+    def deco(fn):
+        fn._max_examples = max_examples
+        return fn
+    return deco
+
+
+def given(*strats, **kw_strats):
+    """Run the test once per drawn example (all draws deterministic)."""
+    def deco(fn):
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            n = getattr(wrapper, "_max_examples", 10)
+            base = zlib.crc32(fn.__qualname__.encode())
+            for i in range(n):
+                rng = random.Random(base + i)
+                drawn = tuple(s.example(rng) for s in strats)
+                drawn_kw = {k: s.example(rng) for k, s in kw_strats.items()}
+                fn(*args, *drawn, **kwargs, **drawn_kw)
+        # hide the drawn parameters from pytest's fixture resolution (real
+        # hypothesis does the same: the wrapper takes no test arguments)
+        del wrapper.__wrapped__
+        wrapper.__signature__ = inspect.Signature()
+        return wrapper
+    return deco

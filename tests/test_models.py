@@ -4,7 +4,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                      # offline image: seeded shim
+    from _hypothesis_compat import given, settings, strategies as st
 
 from repro.models import ModelConfig, model as M
 from repro.models.layers import (apply_rope, attention_chunked,

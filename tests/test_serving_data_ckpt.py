@@ -21,6 +21,7 @@ def _cfg(**kw):
     return ModelConfig(**base)
 
 
+@pytest.mark.slow
 def test_generate_greedy_deterministic_and_matches_forward():
     cfg = _cfg()
     params = M.init(jax.random.PRNGKey(0), cfg)

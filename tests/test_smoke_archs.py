@@ -13,6 +13,9 @@ from repro.training import TrainConfig, make_train_state, make_train_step
 
 B, S = 2, 32
 
+# every arch smoke is a multi-second integration test (fast lane skips them)
+pytestmark = pytest.mark.slow
+
 
 @pytest.fixture(scope="module")
 def tcfg():

@@ -4,10 +4,14 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                      # offline image: seeded shim
+    from _hypothesis_compat import given, settings, strategies as st
 
 from repro.core.ring import VmapComm
-from repro.core.sync import SyncConfig, init_mailbox, sync_gradients
+from repro.core.sync import (FusionSpec, SyncConfig, init_mailbox,
+                             sync_gradients)
 
 
 def grads_like(R, key=0, shape=(3, 4)):
@@ -130,7 +134,7 @@ def test_ring_all_visits_every_rank(O, I):
 
 
 def test_tensor_fusion_matches_unfused():
-    """Paper §VII future work: fused ring payload is semantically identical."""
+    """Paper §VII: fused ring payload is bitwise identical on VmapComm."""
     R = 8
     comm = VmapComm(2, 4)
     g = {"l1": {"w": jax.random.normal(jax.random.PRNGKey(0), (R, 3, 4)),
@@ -160,3 +164,94 @@ def test_dbtree_equals_allreduce():
     np.testing.assert_allclose(np.asarray(o_tree["w"]), np.asarray(o_ar["w"]),
                                rtol=1e-5, atol=1e-6)
     np.testing.assert_array_equal(np.asarray(o_tree["b"]), np.asarray(g["b"]))
+
+
+def test_tensor_fusion_parity_all_ring_modes_and_masks():
+    """fuse_tensors=True ≡ fuse_tensors=False, bitwise, across every ring
+    mode and several mask shapes (incl. dbtree and a fully-masked tree)."""
+    R = 8
+    comm = VmapComm(2, 4)
+    g = {"l1": {"w": jax.random.normal(jax.random.PRNGKey(0), (R, 3, 4)),
+                "b": jax.random.normal(jax.random.PRNGKey(1), (R, 4))},
+         "l2": {"w": jax.random.normal(jax.random.PRNGKey(2), (R, 5, 2)),
+                "b": jax.random.normal(jax.random.PRNGKey(3), (R, 2))}}
+    masks = [
+        {"l1": {"w": True, "b": False}, "l2": {"w": True, "b": False}},
+        {"l1": {"w": True, "b": True}, "l2": {"w": True, "b": True}},
+        {"l1": {"w": False, "b": False}, "l2": {"w": True, "b": False}},
+        # all-False: nothing rides the ring — fused must be a no-op too
+        {"l1": {"w": False, "b": False}, "l2": {"w": False, "b": False}},
+    ]
+    for mask in masks:
+        for mode in ("conv_arar", "arar_arar", "rma_arar_arar", "dbtree"):
+            for epoch in (0, 2, 3):
+                a, mb_a = sync_gradients(
+                    comm, SyncConfig(mode=mode, h=2, fuse_tensors=False), g,
+                    init_mailbox(g), jnp.asarray(epoch), mask)
+                b, mb_b = sync_gradients(
+                    comm, SyncConfig(mode=mode, h=2, fuse_tensors=True), g,
+                    init_mailbox(g), jnp.asarray(epoch), mask)
+                for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+                    np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+                for x, y in zip(jax.tree.leaves(mb_a), jax.tree.leaves(mb_b)):
+                    np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def test_fusion_spec_precomputed_layout():
+    """FusionSpec caches offsets/shapes once; flatten/unflatten roundtrip."""
+    example = [{"w": jnp.zeros((3, 4)), "b": jnp.zeros((4,))},
+               {"w": jnp.zeros((5, 2)), "b": jnp.zeros((2,))}]
+    mask = [{"w": True, "b": False}, {"w": True, "b": False}]
+    spec = FusionSpec.build(example, mask)
+    assert spec.total == 3 * 4 + 5 * 2
+    offs = [s.offset for s in spec.slots if s.masked]
+    assert offs == [0, 12]
+
+    R = 4
+    tree = jax.tree.map(
+        lambda x: jax.random.normal(jax.random.PRNGKey(x.size), (R,) + x.shape),
+        example)
+    flat = spec.flatten(tree, stacked=True)
+    assert flat.shape == (R, spec.total)
+    back = spec.unflatten(flat, tree, stacked=True)
+    for a, b in zip(jax.tree.leaves(back), jax.tree.leaves(tree)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # per-rank (ShardComm) layout
+    tree1 = jax.tree.map(lambda x: x[0], tree)
+    flat1 = spec.flatten(tree1, stacked=False)
+    assert flat1.shape == (spec.total,)
+    back1 = spec.unflatten(flat1, tree1, stacked=False)
+    for a, b in zip(jax.tree.leaves(back1), jax.tree.leaves(tree1)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_rma_mailbox_depth_k_reads_exactly_k_epochs_old():
+    """Regression (SyncConfig.staleness was a dead field): with depth k the
+    rma_arar_arar read at epoch e is the ring deposit from epoch e - k."""
+    R, k = 4, 3
+    comm = VmapComm(1, R)
+    cfg = SyncConfig(mode="rma_arar_arar", h=1000, staleness=k)
+    gs = [grads_like(R, key=100 + e) for e in range(6)]
+    mb = init_mailbox(gs[0], staleness=k, stacked=True)
+    assert mb["w"].shape == (R, k) + gs[0]["w"].shape[1:]
+    for e in range(6):
+        out, mb = sync_gradients(comm, cfg, gs[e], mb, jnp.asarray(e), MASK)
+        if e < k:          # warmup: mailbox slot still zero
+            expect = np.asarray(gs[e]["w"])
+        else:              # deposit from epoch e-k, ring-shifted by 1
+            expect = np.asarray(gs[e]["w"]) + \
+                np.roll(np.asarray(gs[e - k]["w"]), 1, axis=0)
+        np.testing.assert_allclose(np.asarray(out["w"]), expect, rtol=1e-6)
+        # biases stay local regardless of depth
+        np.testing.assert_array_equal(np.asarray(out["b"]),
+                                      np.asarray(gs[e]["b"]))
+
+
+def test_staleness_config_validation():
+    with pytest.raises(ValueError):
+        SyncConfig(mode="rma_arar_arar", staleness=0)
+    with pytest.raises(ValueError):
+        SyncConfig(mode="arar_arar", staleness=2)
+    with pytest.raises(ValueError):
+        SyncConfig(mode="nonsense")
+    SyncConfig(mode="rma_arar_arar", staleness=4)      # fine

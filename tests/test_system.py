@@ -40,6 +40,7 @@ def test_workflow_end_to_end_healthy(mode):
     assert d[-1] < d[0] and d.min() < 1.42, d
 
 
+@pytest.mark.slow
 def test_llm_training_reduces_loss():
     from repro.data import make_batch
     from repro.models import ModelConfig
@@ -67,8 +68,8 @@ def test_miniature_dryrun_on_host_mesh():
     from repro.configs import get_config
     from repro.launch.dryrun import lower_combo
     from repro.training import TrainConfig
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    from repro.launch.mesh import make_mesh
+    mesh = make_mesh((1, 1), ("data", "model"))
     cfg = get_config("tinyllama-1.1b", smoke=True)
     import repro.configs as C
     import repro.launch.dryrun as dr

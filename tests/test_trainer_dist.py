@@ -32,8 +32,8 @@ s_ref = state0
 for _ in range(3):
     s_ref, m_ref = step0(s_ref, batch)
 
-mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,)*3)
+from repro.launch.mesh import make_mesh
+mesh = make_mesh((2, 2, 2), ("pod", "data", "model"))
 state1, sh = make_train_state(jax.random.PRNGKey(0), cfg, tcfg, mesh)
 step1, _ = make_train_step(cfg, tcfg, mesh, state_example=state1, donate=False)
 b_sh = jax.device_put(batch, batch_shardings(batch, mesh))

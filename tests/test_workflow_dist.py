@@ -18,13 +18,28 @@ import jax, jax.numpy as jnp
 from repro.core import pipeline, workflow
 from repro.core.workflow import WorkflowConfig
 from repro.core.sync import SyncConfig
+from repro.launch.mesh import make_mesh
 
-mesh = jax.make_mesh((2, 4), ("pod", "data"),
-                     axis_types=(jax.sharding.AxisType.Auto,)*2)
+mesh = make_mesh((2, 4), ("pod", "data"))
 data = pipeline.make_reference_data(jax.random.PRNGKey(42), 1000)
 out = {}
-for mode in ["allreduce", "conv_arar", "arar_arar", "rma_arar_arar", "ensemble", "dbtree"]:
-    wcfg = WorkflowConfig(sync=SyncConfig(mode=mode, h=2),
+# label: (mode, fuse_tensors, staleness) — default fused, plus explicit
+# unfused and depth-k mailbox variants so the fused engine's cross-backend
+# equivalence is pinned on both code paths
+combos = {
+    "allreduce": ("allreduce", True, 1),
+    "conv_arar": ("conv_arar", True, 1),
+    "arar_arar": ("arar_arar", True, 1),
+    "rma_arar_arar": ("rma_arar_arar", True, 1),
+    "ensemble": ("ensemble", True, 1),
+    "dbtree": ("dbtree", True, 1),
+    "arar_arar_unfused": ("arar_arar", False, 1),
+    "rma_arar_arar_unfused": ("rma_arar_arar", False, 1),
+    "rma_arar_arar_k2": ("rma_arar_arar", True, 2),
+}
+for label, (mode, fuse, k) in combos.items():
+    wcfg = WorkflowConfig(sync=SyncConfig(mode=mode, h=2, fuse_tensors=fuse,
+                                          staleness=k),
                           n_param_samples=8, events_per_sample=4)
     R = 8
     state_v = workflow.init_state(jax.random.PRNGKey(0), R, wcfg)
@@ -43,7 +58,7 @@ for mode in ["allreduce", "conv_arar", "arar_arar", "rma_arar_arar", "ensemble",
     diff = max(float(jnp.max(jnp.abs(a - b)))
                for a, b in zip(jax.tree.leaves(sv["gen"]),
                                jax.tree.leaves(jax.device_get(ss["gen"]))))
-    out[mode] = diff
+    out[label] = diff
 print("RESULT " + json.dumps(out))
 """
 
