@@ -50,18 +50,22 @@ from repro.core import pipeline, workflow
 from repro.core.sync import SyncConfig
 from repro.core.workflow import WorkflowConfig
 from repro.launch import hlo_cost
+from repro.problems import get_problem
 
 R = int(sys.argv[1]); mode = sys.argv[2]; h = int(sys.argv[3])
 fuse = len(sys.argv) > 4 and sys.argv[4] == "fuse"
+problem = sys.argv[5] if len(sys.argv) > 5 else "proxy1d"
 n_outer = max(R // %d, 1); n_inner = min(R, %d)
 from repro.launch.mesh import make_mesh
 mesh = make_mesh((n_outer, n_inner), ("pod", "data"))
 wcfg = WorkflowConfig(sync=SyncConfig(mode=mode, h=h, fuse_tensors=fuse),
-                      n_param_samples=64, events_per_sample=25)
+                      n_param_samples=64, events_per_sample=25,
+                      problem=problem)
 fn, shardings = workflow.make_epoch_fn_shard(mesh, wcfg)
 state = jax.eval_shape(lambda k: workflow.init_state(k, R, wcfg),
                        jax.random.PRNGKey(0))
-data = jax.ShapeDtypeStruct((R, 1000, 2), jnp.float32)
+obs = get_problem(problem).obs_dim
+data = jax.ShapeDtypeStruct((R, 1000, obs), jnp.float32)
 state_in = jax.tree.map(lambda s: jax.ShapeDtypeStruct(s.shape, s.dtype,
                                                        sharding=shardings), state)
 data_in = jax.ShapeDtypeStruct(data.shape, data.dtype, sharding=shardings)
@@ -72,9 +76,10 @@ print("RESULT " + json.dumps(rep.as_dict()))
 """ % (GPUS_PER_NODE, GPUS_PER_NODE)
 
 
-def lower_epoch(R: int, mode: str, h: int, fuse: bool = False) -> dict:
+def lower_epoch(R: int, mode: str, h: int, fuse: bool = False,
+                problem: str = "proxy1d") -> dict:
     out = subprocess.run([sys.executable, "-c", _CHILD, str(R), mode, str(h),
-                          "fuse" if fuse else "nofuse"],
+                          "fuse" if fuse else "nofuse", problem],
                          capture_output=True, text=True, timeout=600,
                          cwd=os.path.dirname(os.path.dirname(__file__)))
     for line in out.stdout.splitlines():
@@ -125,13 +130,14 @@ def model_epoch_time(rep: dict, mode: str, h: int, t_compute: float,
 
 
 def measure_fused_wall_time(ranks=(4, 8, 16), h=25, n_epochs=30,
-                            warmup=5, out_path=None):
+                            warmup=5, out_path=None, problem="proxy1d"):
     """Measured (not modeled) per-epoch wall time, fused vs unfused ring
     payload, on the vmap rank simulator of this host.
 
     Seeds the repo's BENCH_*.json series: writes BENCH_weak_scaling.json at
-    the repo root (plus benchmarks/results/) with per-R epoch times and the
-    fused/unfused ratio, so future PRs can regress against it.
+    the repo root (plus benchmarks/results/) with per-R epoch times, the
+    fused/unfused ratio and the measured problem, so future PRs can regress
+    against it.
     """
     import time
 
@@ -140,11 +146,13 @@ def measure_fused_wall_time(ranks=(4, 8, 16), h=25, n_epochs=30,
 
     sys.path.insert(0, os.path.join(os.path.dirname(os.path.dirname(
         os.path.abspath(__file__))), "src"))
-    from repro.core import pipeline, workflow
+    from repro.core import workflow
     from repro.core.sync import SyncConfig
     from repro.core.workflow import WorkflowConfig
+    from repro.problems import get_problem
 
-    data = pipeline.make_reference_data(jax.random.PRNGKey(42), 2000)
+    data = get_problem(problem).make_reference_data(jax.random.PRNGKey(42),
+                                                    2000)
     rows = []
     for R in ranks:
         n_inner = min(R, GPUS_PER_NODE)
@@ -153,7 +161,7 @@ def measure_fused_wall_time(ranks=(4, 8, 16), h=25, n_epochs=30,
         for fuse in (False, True):
             wcfg = WorkflowConfig(
                 sync=SyncConfig(mode="rma_arar_arar", h=h, fuse_tensors=fuse),
-                n_param_samples=32, events_per_sample=25)
+                n_param_samples=32, events_per_sample=25, problem=problem)
             state = workflow.init_state(jax.random.PRNGKey(0), R, wcfg)
             dpr = jnp.stack([data[:1000]] * R)
             fn = workflow.make_chunk_fn_vmap(n_outer, n_inner, wcfg, 1)
@@ -166,7 +174,8 @@ def measure_fused_wall_time(ranks=(4, 8, 16), h=25, n_epochs=30,
             jax.block_until_ready(m)
             per_fuse["fused" if fuse else "unfused"] = \
                 (time.perf_counter() - t0) / n_epochs
-        rows.append({"ranks": R, "epoch_s_unfused": per_fuse["unfused"],
+        rows.append({"ranks": R, "problem": problem,
+                     "epoch_s_unfused": per_fuse["unfused"],
                      "epoch_s_fused": per_fuse["fused"],
                      "fused_speedup": per_fuse["unfused"] / per_fuse["fused"]})
         print(f"  R={R:4d} unfused {per_fuse['unfused']*1e3:8.2f} ms  "
@@ -174,6 +183,7 @@ def measure_fused_wall_time(ranks=(4, 8, 16), h=25, n_epochs=30,
               f"speedup {rows[-1]['fused_speedup']:.2f}x", flush=True)
     payload = {"benchmark": "weak_scaling_fused_exchange",
                "mode": "rma_arar_arar", "h": h, "n_epochs": n_epochs,
+               "problem": problem,
                "backend": jax.default_backend(), "rows": rows}
     save_result("weak_scaling_fusion", payload)
     root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
@@ -184,7 +194,8 @@ def measure_fused_wall_time(ranks=(4, 8, 16), h=25, n_epochs=30,
 
 
 def run(ranks=(4, 8, 16, 32, 64, 128, 256, 400), h=1000,
-        t_compute=0.05, n_epochs=100_000, disc_batch=102_400, quick=False):
+        t_compute=0.05, n_epochs=100_000, disc_batch=102_400, quick=False,
+        problem="proxy1d"):
     if quick:
         ranks = (4, 8, 16)
     modes = ["conv_arar", "arar_arar", "rma_arar_arar", "allreduce",
@@ -195,18 +206,20 @@ def run(ranks=(4, 8, 16, 32, 64, 128, 256, 400), h=1000,
         rows = []
         for R in ranks:
             R_eff = min(R, 512)
-            rep = lower_epoch(R_eff, mode, h, fuse=(variant == "fused"))
+            rep = lower_epoch(R_eff, mode, h, fuse=(variant == "fused"),
+                              problem=problem)
             t_ep = model_epoch_time(rep, mode, h, t_compute, R)
             total = t_ep * n_epochs
             rate = R * disc_batch * n_epochs / total
-            rows.append({"ranks": R, "epoch_s": t_ep,
+            rows.append({"ranks": R, "problem": problem, "epoch_s": t_ep,
                          "total_h": total / 3600, "analysis_rate": rate,
                          "collective_bytes": rep["total_collective_bytes"],
                          "collective_ops": rep["collective_ops"]})
             print(f"  {mode_label:19s} R={R:4d} epoch {t_ep*1e3:8.2f} ms "
                   f"total {total/3600:7.1f} h rate {rate:.3e} ev/s", flush=True)
         results[mode_label] = rows
-    payload = {"h": h, "t_compute": t_compute, "modes": results}
+    payload = {"h": h, "t_compute": t_compute, "problem": problem,
+               "modes": results}
     save_result("weak_scaling" + ("_quick" if quick else ""), payload)
     return payload
 
@@ -215,11 +228,14 @@ if __name__ == "__main__":
     import argparse
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--problem", default="proxy1d",
+                    help="registered inverse problem to measure "
+                         "(recorded in BENCH_weak_scaling.json)")
     ap.add_argument("--fusion-wall-time", action="store_true",
                     help="measure fused-vs-unfused per-epoch wall time "
                          "(writes BENCH_weak_scaling.json)")
     a = ap.parse_args()
     if a.fusion_wall_time:
-        measure_fused_wall_time()
+        measure_fused_wall_time(problem=a.problem)
     else:
-        run(quick=a.quick)
+        run(quick=a.quick, problem=a.problem)

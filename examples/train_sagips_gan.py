@@ -1,13 +1,14 @@
 """End-to-end SAGIPS driver — the paper's application.
 
 Trains the GAN inverse-problem solver across simulated ranks with any
-Tab. II communication mode, periodically checkpoints generator states with
+Tab. II communication mode and any registered inverse problem (see
+`repro.problems`), periodically checkpoints generator states with
 timestamps (the paper's post-training convergence protocol, §VI-C2), and
-reports the final ensemble prediction.
+reports the final ensemble prediction against the problem's own truth.
 
     PYTHONPATH=src python examples/train_sagips_gan.py \
         --mode rma_arar_arar --ranks 8 --epochs 2000 --h 50 \
-        --ckpt-dir /tmp/sagips_ckpt
+        --problem proxy2d --ckpt-dir /tmp/sagips_ckpt
 """
 import argparse
 import time
@@ -16,16 +17,18 @@ import jax
 import numpy as np
 
 from repro.checkpoint import save_checkpoint
-from repro.core import pipeline, workflow
+from repro.core import gan, workflow
 from repro.core.ensemble import ensemble_response
-from repro.core.residuals import normalized_residuals
 from repro.core.sync import MODES, SyncConfig
 from repro.core.workflow import WorkflowConfig
+from repro.problems import available, get_problem
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--mode", choices=MODES, default="rma_arar_arar")
+    ap.add_argument("--problem", choices=available(), default="proxy1d",
+                    help="registered inverse problem to solve")
     ap.add_argument("--ranks", type=int, default=8)
     ap.add_argument("--inner", type=int, default=4,
                     help="inner group size (GPUs per node, Tab. I)")
@@ -44,17 +47,19 @@ def main():
                          "(0: one chunk per report interval)")
     args = ap.parse_args()
 
+    problem = get_problem(args.problem)
     n_inner = min(args.inner, args.ranks)
     n_outer = args.ranks // n_inner
     wcfg = WorkflowConfig(
         sync=SyncConfig(mode=args.mode, h=args.h, staleness=args.staleness,
                         fuse_tensors=not args.no_fuse),
         n_param_samples=args.param_samples, events_per_sample=25,
-        gen_lr=2e-4, disc_lr=5e-4)
+        gen_lr=2e-4, disc_lr=5e-4, problem=args.problem)
 
-    data = pipeline.make_reference_data(jax.random.PRNGKey(99), args.events)
-    print(f"mode={args.mode} ranks={n_outer}x{n_inner} "
-          f"disc_batch={wcfg.disc_batch}")
+    data = problem.make_reference_data(jax.random.PRNGKey(99), args.events)
+    print(f"problem={args.problem} ({problem.n_params} params -> "
+          f"{problem.obs_dim} observables) mode={args.mode} "
+          f"ranks={n_outer}x{n_inner} disc_batch={wcfg.disc_batch}")
 
     key = jax.random.PRNGKey(0)
     R = n_outer * n_inner
@@ -77,7 +82,7 @@ def main():
     # scan-chunked driver: one Python round-trip per `chunk` epochs
     run = workflow.make_chunk_runner(n_outer, n_inner, wcfg)
 
-    noise = jax.random.normal(jax.random.PRNGKey(7), (256, 135))
+    noise = jax.random.normal(jax.random.PRNGKey(7), (256, gan.NOISE_DIM))
     t0 = time.time()
     for e, n in workflow.chunk_schedule(args.epochs, chunk):
         state, metrics = run(state, data_per_rank, n)
@@ -85,7 +90,7 @@ def main():
         if last // report_every > (e - 1) // report_every \
                 or done == args.epochs:
             p_hat, sigma = ensemble_response(state["gen"], noise)
-            r = np.abs(np.asarray(normalized_residuals(p_hat))).mean()
+            r = float(problem.mean_abs_residual(p_hat))
             d_l = float(np.asarray(metrics["d_loss"][-1]).mean())
             g_l = float(np.asarray(metrics["g_loss"][-1]).mean())
             print(f"epoch {last:6d}  mean|r̂|={r:.4f}  d_loss={d_l:.3f}  "
@@ -95,13 +100,15 @@ def main():
         if args.ckpt_dir and (e == 0 or done % args.ckpt_every == 0
                               or done == args.epochs):
             save_checkpoint(args.ckpt_dir, last, {"gen": state["gen"]},
-                            metadata={"wall_s": time.time() - t0})
+                            metadata={"wall_s": time.time() - t0,
+                                      "problem": args.problem})
 
     p_hat, sigma = ensemble_response(state["gen"], noise)
+    truth = np.asarray(problem.true_params())
     print("\nfinal ensemble prediction vs truth:")
-    for i in range(6):
+    for i in range(problem.n_params):
         print(f"  p{i}: {float(p_hat[i]):.4f} ± {float(sigma[i]):.4f} "
-              f"(truth {float(pipeline.TRUE_PARAMS[i]):.4f})")
+              f"(truth {float(truth[i]):.4f})")
 
 
 if __name__ == "__main__":

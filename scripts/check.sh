@@ -5,8 +5,16 @@
 #   scripts/check.sh -m "not slow"   # fast lane: skips the >1 s integration
 #                                    # tests (subprocess mesh equivalence,
 #                                    # end-to-end workflow convergence)
+#   scripts/check.sh --problems      # problems lane: per-problem smoke tests
+#                                    # (registry, gradient flow, fused/unfused
+#                                    # parity, golden proxy1d regression)
 #
 # Extra args pass straight through to pytest.
 set -euo pipefail
 cd "$(dirname "$0")/.."
+if [[ "${1:-}" == "--problems" ]]; then
+    shift
+    exec env PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
+        python -m pytest -x -q tests/test_problems.py "$@"
+fi
 PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" python -m pytest -x -q "$@"

@@ -3,6 +3,7 @@ reproduced and generalized as a JAX/TPU distributed-training framework.
 
 Subpackages:
     core        the paper's contribution (ARAR/RMA gradient sync, GAN workflow)
+    problems    pluggable inverse problems (registry; proxy1d/proxy2d/linear)
     models      architecture zoo (dense GQA / MoE / Mamba-2 / hybrid / audio / vlm)
     parallel    mesh + logical-axis sharding rules
     optim       optimizers & schedules (from scratch)

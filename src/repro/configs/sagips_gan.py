@@ -1,4 +1,11 @@
-"""The paper's own workload: the SAGIPS GAN loop-closure configuration (§V)."""
+"""The paper's own workload: the SAGIPS GAN loop-closure configuration (§V).
+
+Configs bind a registered `repro.problems` workload by name; `for_problem`
+retargets either preset at any registry entry without touching the solver
+settings.
+"""
+import dataclasses
+
 from ..core.sync import SyncConfig
 from ..core.workflow import WorkflowConfig
 
@@ -10,6 +17,7 @@ PAPER = WorkflowConfig(
     data_fraction=0.5,
     gen_lr=1e-5,
     disc_lr=1e-4,
+    problem="proxy1d",
 )
 
 # reduced settings for CPU-scale convergence studies (same structure)
@@ -20,4 +28,12 @@ REDUCED = WorkflowConfig(
     data_fraction=0.5,
     gen_lr=2e-4,
     disc_lr=5e-4,
+    problem="proxy1d",
 )
+
+
+def for_problem(problem: str, base: WorkflowConfig = REDUCED) -> WorkflowConfig:
+    """Retarget a preset at another registered inverse problem."""
+    from ..problems import get_problem
+    get_problem(problem)                     # fail fast on unknown names
+    return dataclasses.replace(base, problem=problem)

@@ -22,6 +22,23 @@ DISC_WIDTHS = (2, 192, 192, 64, 1)
 LEAK = 0.01
 
 
+def gen_widths(n_params=None, noise_dim=None):
+    """Generator widths for a problem with `n_params` outputs.
+
+    Hidden layers come from the module-level GEN_WIDTHS (paper-exact by
+    default; benchmarks patch it for capacity sweeps) — only the in/out
+    dims vary per problem."""
+    base = GEN_WIDTHS
+    return ((base[0] if noise_dim is None else noise_dim,)
+            + base[1:-1] + (base[-1] if n_params is None else n_params,))
+
+
+def disc_widths(obs_dim=None):
+    """Discriminator widths for a problem with `obs_dim` observables."""
+    base = DISC_WIDTHS
+    return ((base[0] if obs_dim is None else obs_dim,) + base[1:])
+
+
 def init_mlp(key, widths: Sequence[int], dtype=jnp.float32):
     """Kaiming-normal MLP init (paper §V-A)."""
     params = []
@@ -42,21 +59,22 @@ def mlp_apply(params, x, final_activation=None):
     return x
 
 
-def init_generator(key, dtype=jnp.float32):
-    return init_mlp(key, GEN_WIDTHS, dtype)
+def init_generator(key, n_params=None, dtype=jnp.float32):
+    return init_mlp(key, gen_widths(n_params), dtype)
 
 
-def init_discriminator(key, dtype=jnp.float32):
-    return init_mlp(key, DISC_WIDTHS, dtype)
+def init_discriminator(key, obs_dim=None, dtype=jnp.float32):
+    return init_mlp(key, disc_widths(obs_dim), dtype)
 
 
 def generate_params(gen_params, noise):
-    """noise [K, NOISE_DIM] -> parameter samples [K, 6] (sigmoid-bounded)."""
+    """noise [K, NOISE_DIM] -> parameter samples [K, n_params]
+    (sigmoid-bounded to the problem's unit cube)."""
     return mlp_apply(gen_params, noise, final_activation=jax.nn.sigmoid)
 
 
 def discriminate(disc_params, events):
-    """events [N, 2] -> logits [N]."""
+    """events [N, obs_dim] -> logits [N]."""
     return mlp_apply(disc_params, events)[..., 0]
 
 

@@ -1,5 +1,11 @@
 """The environment pipeline f(x̂(p)) — the "1D proxy app".
 
+This module is the forward-model backend of the registered `proxy1d`
+problem (`repro.problems.proxy1d` wraps these exact functions, so the
+default-config solver trajectory is bitwise-stable); other workloads plug
+in through the same `repro.problems.InverseProblem` interface without
+touching this file.
+
 Translates 6 predicted parameters into synthetic events (y0, y1) through a
 *differentiable inverse-CDF sampler* (§V: "The sampler used within the 1D
 proxy app relies on the inverse CDF method, i.e. we use the inverse of a
@@ -85,10 +91,12 @@ def make_reference_data(key, n_events: int, params=None):
 def synthetic_events(gen_params, key, n_param_samples: int = PARAM_SAMPLES,
                      events_per_sample: int = EVENTS_PER_SAMPLE,
                      impl: str = "jnp", interpret=None):
-    """Full generator->pipeline pass. Returns (events [K*E, 2], params [K, 6])."""
-    from . import gan
-    k1, k2 = jax.random.split(key)
-    noise = jax.random.normal(k1, (n_param_samples, gan.NOISE_DIM))
-    params = gan.generate_params(gen_params, noise)
-    u = jax.random.uniform(k2, (n_param_samples, events_per_sample, 2))
-    return sample_events(params, u, impl=impl, interpret=interpret), params
+    """Full generator->pipeline pass. Returns (events [K*E, 2], params [K, 6]).
+
+    Delegates to the problem-generic `repro.problems.synthetic_events` so
+    the PRNG key-split logic (the bitwise-critical part) lives in exactly
+    one place."""
+    from .. import problems
+    return problems.synthetic_events(
+        problems.get_problem("proxy1d"), gen_params, key, n_param_samples,
+        events_per_sample, impl=impl, interpret=interpret)

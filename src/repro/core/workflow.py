@@ -12,6 +12,10 @@ Per epoch, each rank (§IV-B):
 Two drivers share the per-rank functions:
   * `train_vmap`     — R simulated ranks on one device (convergence studies)
   * `make_epoch_fn_shard` — shard_map over a mesh (production / dry-run)
+
+The forward model is pluggable: `WorkflowConfig.problem` names a registered
+`repro.problems.InverseProblem`, and the GAN widths, sampler dispatch and
+residual metric all derive from it (default: the paper's 1D proxy app).
 """
 from __future__ import annotations
 
@@ -24,7 +28,6 @@ import jax.numpy as jnp
 
 from . import gan, pipeline, sync as sync_lib
 from .ring import Comm, ShardComm, VmapComm
-from .residuals import normalized_residuals
 from ..optim import adam
 
 
@@ -38,17 +41,28 @@ class WorkflowConfig:
     disc_lr: float = 1e-4
     sampler_impl: str = "jnp"                           # 'jnp' | 'pallas'
     sampler_interpret: Optional[bool] = None            # None: auto per backend
+    problem: str = "proxy1d"                            # registry key
 
     @property
     def disc_batch(self) -> int:
         return self.n_param_samples * self.events_per_sample
 
+    @property
+    def problem_obj(self):
+        """Resolve the registered `InverseProblem` (lazy import so the
+        config stays a plain hashable dataclass and `repro.problems` can
+        import `repro.core` without a cycle)."""
+        from ..problems import get_problem
+        return get_problem(self.problem)
+
 
 def init_rank_state(key, wcfg: WorkflowConfig):
-    """State of ONE rank (no leading rank axis)."""
+    """State of ONE rank (no leading rank axis); GAN widths derive from the
+    problem's param/observable dims."""
+    prob = wcfg.problem_obj
     kg, kd, kr = jax.random.split(key, 3)
-    gen_p = gan.init_generator(kg)
-    disc_p = gan.init_discriminator(kd)
+    gen_p = gan.init_generator(kg, n_params=prob.n_params)
+    disc_p = gan.init_discriminator(kd, obs_dim=prob.obs_dim)
     gen_opt = adam(wcfg.gen_lr).init(gen_p)
     disc_opt = adam(wcfg.disc_lr).init(disc_p)
     mailbox = sync_lib.init_mailbox(gen_p, staleness=wcfg.sync.staleness)
@@ -86,12 +100,15 @@ def _bootstrap(rng, data, n_draw: int):
 
 def rank_grads(state, data_local, wcfg: WorkflowConfig):
     """Steps 1–4 for one rank.  Returns (partial_state, gen_grads, metrics)."""
+    from .. import problems as problems_lib
+    prob = wcfg.problem_obj
     rng, k_boot, k_gen = jax.random.split(state["rng"], 3)
     # identical real/fake counts (§V-A): draw the synthetic batch size
     real = _bootstrap(k_boot, data_local, wcfg.disc_batch)
 
-    fake, pred_params = pipeline.synthetic_events(
-        state["gen"], k_gen, wcfg.n_param_samples, wcfg.events_per_sample,
+    fake, pred_params = problems_lib.synthetic_events(
+        prob, state["gen"], k_gen, wcfg.n_param_samples,
+        wcfg.events_per_sample,
         impl=wcfg.sampler_impl, interpret=wcfg.sampler_interpret)
 
     # --- discriminator update (local, immediate — §IV-B) ---------------------
@@ -100,10 +117,10 @@ def rank_grads(state, data_local, wcfg: WorkflowConfig):
     d_upd, disc_opt = adam(wcfg.disc_lr).update(d_grads, state["disc_opt"])
     disc = jax.tree.map(lambda p, u: p + u, state["disc"], d_upd)
 
-    # --- generator gradients through pipeline + (old) discriminator ----------
+    # --- generator gradients through forward model + (old) discriminator -----
     def g_objective(gen_p):
-        fake_ev, _ = pipeline.synthetic_events(
-            gen_p, k_gen, wcfg.n_param_samples, wcfg.events_per_sample,
+        fake_ev, _ = problems_lib.synthetic_events(
+            prob, gen_p, k_gen, wcfg.n_param_samples, wcfg.events_per_sample,
             impl=wcfg.sampler_impl, interpret=wcfg.sampler_interpret)
         return gan.gen_loss(state["disc"], fake_ev)
 
@@ -112,7 +129,7 @@ def rank_grads(state, data_local, wcfg: WorkflowConfig):
     metrics = {
         "d_loss": d_loss, "g_loss": g_loss,
         "pred_params": pred_params.mean(axis=0),
-        "residuals": normalized_residuals(pred_params.mean(axis=0)),
+        "residuals": prob.residuals(pred_params.mean(axis=0)),
     }
     new_state = dict(state, disc=disc, disc_opt=disc_opt, rng=rng)
     return new_state, g_grads, metrics
@@ -130,15 +147,19 @@ def rank_apply(state, synced_grads, new_mailbox, wcfg: WorkflowConfig):
 # drivers
 
 
-def _gen_example():
+def _gen_example(wcfg: WorkflowConfig):
     """Abstract per-rank generator pytree (shapes/dtypes only, no compute)."""
-    return jax.eval_shape(gan.init_generator, jax.random.PRNGKey(0))
+    n_params = wcfg.problem_obj.n_params
+    return jax.eval_shape(lambda k: gan.init_generator(k, n_params=n_params),
+                          jax.random.PRNGKey(0))
 
 
-def _mask_and_spec():
+def _mask_and_spec(wcfg: WorkflowConfig):
     """Weight mask + cached FusionSpec, built once per driver construction
-    (never re-derived leaf-by-leaf inside the jitted epoch)."""
-    example = _gen_example()
+    (never re-derived leaf-by-leaf inside the jitted epoch).  Derived from
+    the problem's generator shape — the FusionSpec/ring machinery itself
+    stays problem-agnostic."""
+    example = _gen_example(wcfg)
     mask = gan.weight_mask(example)
     return mask, sync_lib.FusionSpec.build(example, mask)
 
@@ -158,10 +179,17 @@ def _epoch_body_vmap(comm, mask, spec, wcfg: WorkflowConfig):
 
 
 def make_epoch_fn_vmap(n_outer: int, n_inner: int, wcfg: WorkflowConfig):
-    """Epoch step over stacked state [R, ...]; data_per_rank [R, N, 2]."""
+    """Epoch step over stacked state [R, ...]; data_per_rank [R, N, obs].
+
+    The state argument is DONATED: the fused ring payload and the depth-k
+    RMA mailbox live inside the state pytree, so donation lets XLA alias
+    the exchange buffers in place instead of allocating a fresh [R, D]
+    payload every epoch.  Callers must not reuse the state they pass in.
+    """
     comm = VmapComm(n_outer, n_inner)
-    mask, spec = _mask_and_spec()
-    return jax.jit(_epoch_body_vmap(comm, mask, spec, wcfg))
+    mask, spec = _mask_and_spec(wcfg)
+    return jax.jit(_epoch_body_vmap(comm, mask, spec, wcfg),
+                   donate_argnums=(0,))
 
 
 def make_chunk_fn_vmap(n_outer: int, n_inner: int, wcfg: WorkflowConfig,
@@ -171,9 +199,10 @@ def make_chunk_fn_vmap(n_outer: int, n_inner: int, wcfg: WorkflowConfig,
 
     Returns fn(state, data_per_rank) -> (state, metrics) with every metric
     leaf gaining a leading [chunk] axis (one row per epoch in the chunk).
+    The state argument is donated (see `make_epoch_fn_vmap`).
     """
     comm = VmapComm(n_outer, n_inner)
-    mask, spec = _mask_and_spec()
+    mask, spec = _mask_and_spec(wcfg)
     epoch = _epoch_body_vmap(comm, mask, spec, wcfg)
 
     def chunked(state, data_per_rank):
@@ -181,7 +210,7 @@ def make_chunk_fn_vmap(n_outer: int, n_inner: int, wcfg: WorkflowConfig,
             return epoch(s, data_per_rank)
         return jax.lax.scan(body, state, xs=None, length=chunk)
 
-    return jax.jit(chunked)
+    return jax.jit(chunked, donate_argnums=(0,))
 
 
 def make_epoch_fn_shard(mesh, wcfg: WorkflowConfig,
@@ -197,7 +226,7 @@ def make_epoch_fn_shard(mesh, wcfg: WorkflowConfig,
     n_outer = mesh.shape[outer_axis] if outer_axis in mesh.axis_names else 1
     n_inner = mesh.shape[inner_axis]
     comm = ShardComm(n_outer, n_inner, outer_axis, inner_axis)
-    mask, fspec = _mask_and_spec()
+    mask, fspec = _mask_and_spec(wcfg)
 
     def epoch(state, data_local):
         # leading axis has local size 1 inside shard_map
@@ -216,7 +245,8 @@ def make_epoch_fn_shard(mesh, wcfg: WorkflowConfig,
     fn = shard_map(epoch, mesh, in_specs=(spec, spec),
                    out_specs=(spec, spec))
     shardings = NamedSharding(mesh, spec)
-    return jax.jit(fn), shardings
+    # donate the state (mailbox + exchange buffers alias in place)
+    return jax.jit(fn, donate_argnums=(0,)), shardings
 
 
 def chunk_schedule(n_epochs: int, chunk: int):
@@ -249,7 +279,8 @@ def train_vmap(key, wcfg: WorkflowConfig, n_outer: int, n_inner: int,
                chunk: int = 0):
     """Convergence-study driver: R = n_outer*n_inner simulated ranks.
 
-    `data` [N, 2] is the full reference set; the master rank "distributes"
+    `data` [N, obs_dim] is the full reference set (from the configured
+    problem's `make_reference_data`); the master rank "distributes"
     a copy to every rank (§IV-B: each rank has its own copy, analyzes a
     random fraction).  Returns (final_state, history dict of stacked
     metrics at each recorded epoch).

@@ -71,3 +71,30 @@ def inverse_cdf(u, mu, s, k, block_k: int = 256, block_e: int = 128,
         interpret=interpret,
     )(u, mu[:, None], s[:, None], k[:, None])
     return y[:K, :E]
+
+
+def fold_channels(icdf_fn, u, mu, s, k, *args, **kwargs):
+    """Shape-polymorphic multi-channel dispatch: u [K, E, C]; mu/s/k [K, C].
+
+    Folds the C observable channels into the param-row axis ([K, E, C] ->
+    [K*C, E]) so ONE launch of the single-channel sampler `icdf_fn` covers
+    every channel — the grid tiling is identical, just over C-times as many
+    rows.  Pass the raw kernel (`inverse_cdf` here) or `kernels.ops.
+    inverse_cdf` to ride its custom VJP through the (differentiable) fold
+    reshapes.  Extra args forward to `icdf_fn`.  Returns y [K, E, C].
+    """
+    K, E, C = u.shape
+    uf = jnp.moveaxis(u, -1, 1).reshape(K * C, E)
+    y = icdf_fn(uf, mu.reshape(K * C), s.reshape(K * C), k.reshape(K * C),
+                *args, **kwargs)
+    return jnp.moveaxis(y.reshape(K, C, E), 1, -1)
+
+
+def inverse_cdf_channels(u, mu, s, k, *, block_k: int = 256,
+                         block_e: int = 128, interpret: bool | None = None):
+    """Raw-kernel multi-channel dispatch (no autodiff wrapper; for gradient
+    flow use `kernels.ops.inverse_cdf_channels`).  Options are keyword-only
+    — the differentiable sibling takes `interpret` as its 5th positional
+    arg, and silently binding that to `block_k` here would be a trap."""
+    return fold_channels(inverse_cdf, u, mu, s, k,
+                         block_k=block_k, block_e=block_e, interpret=interpret)

@@ -24,6 +24,7 @@ import jax.numpy as jnp
 from .flash_attention import flash_attention as _flash
 from .ssd_scan import ssd_scan as _ssd
 from .inverse_cdf import inverse_cdf as _icdf
+from .inverse_cdf import fold_channels as _fold_channels
 from . import ref
 
 def _interpret() -> bool:
@@ -126,3 +127,14 @@ def _icdf_bwd(interpret, res, g):
 
 
 inverse_cdf.defvjp(_icdf_fwd, _icdf_bwd)
+
+
+def inverse_cdf_channels(u, mu, s, k, interpret: Optional[bool] = None):
+    """Multi-channel problem layout: u [K, E, C]; mu/s/k [K, C] -> [K, E, C].
+
+    One fused kernel launch for all observable channels (folded into the
+    param-row axis — `kernels.inverse_cdf.fold_channels`); gradients ride
+    the closed-form custom VJP of the single-channel `inverse_cdf` through
+    the differentiable fold reshapes.
+    """
+    return _fold_channels(inverse_cdf, u, mu, s, k, interpret)

@@ -1,0 +1,175 @@
+"""Pluggable inverse problems — the workload layer of the SAGIPS solver.
+
+SAGIPS (the paper) is a *general* asynchronous generative inverse problem
+solver; the 1D proxy app of §V is just its first workload.  This package
+makes the forward model the pluggable element of the system (the framing of
+Hegde, "Algorithmic Aspects of Inverse Problems Using Generative Models",
+and Patel et al., "Solution of Physics-based Bayesian Inverse Problems with
+Deep Generative Priors"): everything the solver stack needs to know about a
+workload lives behind the `InverseProblem` interface, and the GAN widths,
+sampler dispatch, residual metric, drivers, benchmarks and CLIs all derive
+from it.  The FusionSpec/ring machinery in `core.sync` never sees the
+problem at all — problem-agnosticism of the exchange engine is a tested
+invariant (tests/test_problems.py), not an accident.
+
+Registered problems (see `available()`):
+
+    proxy1d      the paper's 1D proxy app — 6 params, 2 independent
+                 logistic-family observables (bitwise-identical to the
+                 pre-registry behavior under default config)
+    proxy2d      correlated-observable variant — 10 params, 3 observables
+                 mixed by a learned correlation parameter; exercises the
+                 Pallas sampler on a folded [K*C, E] shape
+    linear_blur  linear operator y = A x + eps — an 8-pixel source seen
+                 through a 4-channel Gaussian blur with logistic measurement
+                 noise (sampled by the same inverse-CDF kernel)
+
+## Adding a new inverse problem
+
+1. Create `src/repro/problems/<name>.py` with a subclass of
+   `InverseProblem` defining the class attributes
+
+       name            registry key (also the CLI `--problem` value)
+       n_params        generator output dim (sigmoid-bounded unit cube)
+       obs_dim         per-event observable dim (discriminator input width)
+       noise_channels  uniform noise draws per event fed to `sample_events`
+
+   and the methods
+
+       true_params()                     loop-closure truth in (0,1)^n_params
+       sample_events(params, u, impl, interpret)
+                                         differentiable forward model:
+                                         params [K, n_params], u [K, E,
+                                         noise_channels] -> events
+                                         [K*E, obs_dim].  Gradients MUST
+                                         flow from events back to params —
+                                         the whole SAGIPS design hinges on
+                                         it.  `impl='pallas'` should route
+                                         the hot loop through
+                                         `repro.kernels.ops` when the model
+                                         has an inverse-CDF-shaped core.
+
+   `make_reference_data`, `residuals` and `mean_abs_residual` come from the
+   base class (override only if the defaults don't fit).
+
+2. Register an instance at the bottom of the module:
+
+       register(MyProblem())
+
+   and import the module in the `_register_builtin` list below.
+
+3. Hook it up: nothing else is required.  `WorkflowConfig(problem="<name>")`
+   threads it through both drivers, `examples/train_sagips_gan.py --problem
+   <name>` trains it, `benchmarks/weak_scaling.py --problem <name>` measures
+   it, and `scripts/check.sh --problems` runs the per-problem smoke tests
+   (gradient flow + fused/unfused exchange parity) against every registry
+   entry automatically.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class InverseProblem:
+    """Interface every SAGIPS workload implements (see module docstring)."""
+
+    name: str
+    n_params: int
+    obs_dim: int
+    noise_channels: int
+
+    # default events per parameter sample for reference-data generation
+    # (Tab. III of the paper)
+    events_per_sample: int = 100
+
+    def true_params(self) -> jnp.ndarray:
+        """Loop-closure truth in (0,1)^n_params (the generator head is
+        sigmoid-bounded, so truths live in the unit cube)."""
+        raise NotImplementedError
+
+    def sample_events(self, params, u, impl: str = "jnp", interpret=None):
+        """params [K, n_params] in (0,1); u [K, E, noise_channels] uniform.
+
+        Returns events [K*E, obs_dim], differentiable w.r.t. params."""
+        raise NotImplementedError
+
+    # -- defaults ------------------------------------------------------------
+
+    def make_reference_data(self, key, n_events: int, params=None):
+        """Toy measurement: events generated from the truth parameters."""
+        params = self.true_params() if params is None else params
+        E = self.events_per_sample
+        K = -(-n_events // E)
+        u = jax.random.uniform(key, (K, E, self.noise_channels))
+        return self.sample_events(jnp.tile(params[None, :], (K, 1)),
+                                  u)[:n_events]
+
+    def residuals(self, pred_params, true_params=None):
+        """Normalized parameter residuals (Eq. 6) against this problem's
+        truth, with the safe denominator of `core.residuals`."""
+        from ..core.residuals import normalized_residuals
+        tp = self.true_params() if true_params is None else true_params
+        return normalized_residuals(pred_params, tp)
+
+    def mean_abs_residual(self, pred_params, true_params=None):
+        return jnp.mean(jnp.abs(self.residuals(pred_params, true_params)))
+
+
+def synthetic_events(problem: InverseProblem, gen_params, key,
+                     n_param_samples: int, events_per_sample: int,
+                     impl: str = "jnp", interpret=None):
+    """Full generator -> forward-model pass for any registered problem.
+
+    Returns (events [K*E, obs_dim], params [K, n_params]).  Key usage is
+    identical to the historical `pipeline.synthetic_events`, so proxy1d is
+    bitwise-reproducible through this path.
+    """
+    from ..core import gan
+    k1, k2 = jax.random.split(key)
+    noise = jax.random.normal(k1, (n_param_samples, gan.NOISE_DIM))
+    params = gan.generate_params(gen_params, noise)
+    u = jax.random.uniform(
+        k2, (n_param_samples, events_per_sample, problem.noise_channels))
+    return problem.sample_events(params, u, impl=impl,
+                                 interpret=interpret), params
+
+
+# ----------------------------------------------------------------------------
+# registry
+
+
+_REGISTRY: Dict[str, InverseProblem] = {}
+
+
+def register(problem: InverseProblem) -> InverseProblem:
+    """Add a problem instance to the registry (idempotent per name)."""
+    for attr in ("name", "n_params", "obs_dim", "noise_channels"):
+        if getattr(problem, attr, None) is None:
+            raise ValueError(f"problem is missing required attribute {attr!r}")
+    _REGISTRY[problem.name] = problem
+    return problem
+
+
+def get_problem(name: str) -> InverseProblem:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise KeyError(f"unknown inverse problem {name!r}; "
+                       f"registered: {sorted(_REGISTRY)}") from None
+
+
+def available() -> Tuple[str, ...]:
+    return tuple(sorted(_REGISTRY))
+
+
+def _register_builtin():
+    from . import proxy1d, proxy2d, linear  # noqa: F401  (register on import)
+
+
+_register_builtin()
+
+__all__ = ["InverseProblem", "available", "get_problem", "register",
+           "synthetic_events"]

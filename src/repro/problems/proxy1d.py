@@ -1,0 +1,33 @@
+"""The paper's 1D proxy app as a registered `InverseProblem`.
+
+This is a thin adapter over `repro.core.pipeline` — the forward model,
+reference-data generator and truth parameters are *the same functions* the
+pre-registry code ran, so the default-config solver trajectory is
+bitwise-identical to the historical behavior (pinned by
+tests/test_problems.py::test_proxy1d_bitwise_identical_to_seed).
+"""
+from __future__ import annotations
+
+from ..core import pipeline
+from . import InverseProblem, register
+
+
+class Proxy1D(InverseProblem):
+    name = "proxy1d"
+    n_params = pipeline.N_PARAMS            # 6
+    obs_dim = 2                             # (y0, y1)
+    noise_channels = 2
+    events_per_sample = pipeline.EVENTS_PER_SAMPLE
+
+    def true_params(self):
+        return pipeline.TRUE_PARAMS
+
+    def sample_events(self, params, u, impl: str = "jnp", interpret=None):
+        return pipeline.sample_events(params, u, impl=impl,
+                                      interpret=interpret)
+
+    def make_reference_data(self, key, n_events: int, params=None):
+        return pipeline.make_reference_data(key, n_events, params)
+
+
+register(Proxy1D())

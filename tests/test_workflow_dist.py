@@ -46,13 +46,15 @@ for label, (mode, fuse, k) in combos.items():
     sub_keys = jax.random.split(jax.random.PRNGKey(9), R)
     dpr = jnp.stack([jnp.take(data, jax.random.permutation(k, 1000)[:500], axis=0)
                      for k in sub_keys])
+    # both epoch fns donate their state arg: shard a copy out BEFORE the
+    # vmap loop consumes state_v's buffers
+    ef_s, shardings = workflow.make_epoch_fn_shard(mesh, wcfg)
+    ss = jax.device_put(state_v, shardings)
+    ds = jax.device_put(dpr, shardings)
     ef_v = workflow.make_epoch_fn_vmap(2, 4, wcfg)
     sv = state_v
     for _ in range(3):
         sv, _ = ef_v(sv, dpr)
-    ef_s, shardings = workflow.make_epoch_fn_shard(mesh, wcfg)
-    ss = jax.device_put(state_v, shardings)
-    ds = jax.device_put(dpr, shardings)
     for _ in range(3):
         ss, _ = ef_s(ss, ds)
     diff = max(float(jnp.max(jnp.abs(a - b)))
