@@ -40,6 +40,12 @@ def main():
     ap.add_argument("--ckpt-every", type=int, default=500)
     ap.add_argument("--staleness", type=int, default=1,
                     help="RMA mailbox depth k (rma_arar_arar only)")
+    ap.add_argument("--sync-mode", choices=("sync", "overlap"),
+                    default="sync",
+                    help="epoch schedule: 'sync' blocks on the pod-boundary "
+                         "transfer; 'overlap' ships the outer-ring fused "
+                         "payload at epoch t and consumes it at t+1 "
+                         "(grouped modes only, 1-epoch-stale outer reads)")
     ap.add_argument("--no-fuse", action="store_true",
                     help="disable the fused single-buffer ring payload")
     ap.add_argument("--chunk", type=int, default=0,
@@ -52,13 +58,15 @@ def main():
     n_outer = args.ranks // n_inner
     wcfg = WorkflowConfig(
         sync=SyncConfig(mode=args.mode, h=args.h, staleness=args.staleness,
-                        fuse_tensors=not args.no_fuse),
+                        fuse_tensors=not args.no_fuse,
+                        overlap=args.sync_mode == "overlap"),
         n_param_samples=args.param_samples, events_per_sample=25,
         gen_lr=2e-4, disc_lr=5e-4, problem=args.problem)
 
     data = problem.make_reference_data(jax.random.PRNGKey(99), args.events)
     print(f"problem={args.problem} ({problem.n_params} params -> "
           f"{problem.obs_dim} observables) mode={args.mode} "
+          f"sync_mode={args.sync_mode} "
           f"ranks={n_outer}x{n_inner} disc_batch={wcfg.disc_batch}")
 
     key = jax.random.PRNGKey(0)

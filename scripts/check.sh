@@ -8,6 +8,9 @@
 #   scripts/check.sh --problems      # problems lane: per-problem smoke tests
 #                                    # (registry, gradient flow, fused/unfused
 #                                    # parity, golden proxy1d regression)
+#   scripts/check.sh --docs          # docs lane: dead links, stale file
+#                                    # references, package docstrings
+#                                    # (scripts/docs_lint.py)
 #
 # Extra args pass straight through to pytest.
 set -euo pipefail
@@ -16,5 +19,9 @@ if [[ "${1:-}" == "--problems" ]]; then
     shift
     exec env PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
         python -m pytest -x -q tests/test_problems.py "$@"
+fi
+if [[ "${1:-}" == "--docs" ]]; then
+    shift
+    exec python scripts/docs_lint.py "$@"
 fi
 PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" python -m pytest -x -q "$@"

@@ -1,0 +1,133 @@
+#!/usr/bin/env python3
+"""Docs lane of the tier-1 gate (`scripts/check.sh --docs`).
+
+Three checks, all offline and dependency-free:
+
+  1. dead relative links — every `[text](target)` in the linted markdown
+     set whose target is not an URL/anchor must resolve to a file or
+     directory relative to the markdown file;
+  2. stale file references — every repo-path-looking token inside
+     backtick code spans (e.g. `core/sync.py`, `tests/test_overlap.py`,
+     `src/repro/problems/`) must exist, either as written from the repo
+     root or under src/ / src/repro/ (docs refer to solver modules by
+     their package-relative path);
+  3. package docstrings — every `__init__.py` under src/repro must carry
+     a non-empty module docstring.
+
+Exit status is the number of problems found (0 == clean).
+"""
+from __future__ import annotations
+
+import ast
+import os
+import re
+import sys
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+# markdown linted: the whole documentation surface of the repo
+MD_FILES = ["README.md", "ROADMAP.md", "CHANGES.md", "PAPER.md",
+            "PAPERS.md", "ISSUE.md"]
+MD_DIRS = ["docs"]
+
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+CODE_SPAN_RE = re.compile(r"`([^`]+)`")
+# repo-path-looking token: has a slash and a known artifact extension,
+# or is an explicit directory reference ending in '/'
+FILE_REF_RE = re.compile(
+    r"^[A-Za-z0-9_.\-/]+\.(?:py|sh|md|json|npz|txt|yaml|toml)$")
+DIR_REF_RE = re.compile(r"^[A-Za-z0-9_.\-/]+/$")
+SKIP_CHARS = set("<>*{}$")
+
+
+def _md_files():
+    out = [f for f in MD_FILES if os.path.exists(os.path.join(ROOT, f))]
+    for d in MD_DIRS:
+        dd = os.path.join(ROOT, d)
+        if os.path.isdir(dd):
+            out += [os.path.join(d, f) for f in sorted(os.listdir(dd))
+                    if f.endswith(".md")]
+    return out
+
+
+def _strip_code_fences(text: str) -> str:
+    """Drop fenced blocks: they hold command lines and schema examples,
+    which check 2 handles token-wise via inline spans only."""
+    return re.sub(r"```.*?```", "", text, flags=re.S)
+
+
+def _exists_anywhere(ref: str) -> bool:
+    ref = ref.rstrip("/")
+    for base in ("", "src", os.path.join("src", "repro")):
+        p = os.path.join(ROOT, base, ref)
+        if os.path.exists(p):
+            return True
+    return False
+
+
+def check_links(problems):
+    for md in _md_files():
+        path = os.path.join(ROOT, md)
+        text = _strip_code_fences(open(path).read())
+        for target in LINK_RE.findall(text):
+            if target.startswith(("http://", "https://", "mailto:", "#")):
+                continue
+            rel = target.split("#", 1)[0]
+            if not rel:
+                continue
+            resolved = os.path.normpath(
+                os.path.join(os.path.dirname(path), rel))
+            if not os.path.exists(resolved):
+                problems.append(f"{md}: dead link -> {target}")
+
+
+def check_file_refs(problems):
+    for md in _md_files():
+        text = open(os.path.join(ROOT, md)).read()
+        # fenced blocks break inline-span parity: lift their bodies out
+        # first, then scan inline spans on the fence-free remainder
+        fences = re.findall(r"```[a-zA-Z]*\n(.*?)```", text, flags=re.S)
+        spans = fences + CODE_SPAN_RE.findall(_strip_code_fences(text))
+        for span in spans:
+            for token in span.split():
+                token = token.strip(".,;:()'\"")
+                token = token.split("::", 1)[0]       # pytest node ids
+                if not token or SKIP_CHARS & set(token) or "/" not in token:
+                    continue
+                if FILE_REF_RE.match(token) or DIR_REF_RE.match(token):
+                    if not _exists_anywhere(token):
+                        problems.append(f"{md}: stale file reference "
+                                        f"`{token}`")
+
+
+def check_package_docstrings(problems):
+    pkg_root = os.path.join(ROOT, "src", "repro")
+    for dirpath, _dirnames, filenames in os.walk(pkg_root):
+        if "__init__.py" not in filenames:
+            continue
+        init = os.path.join(dirpath, "__init__.py")
+        rel = os.path.relpath(init, ROOT)
+        try:
+            doc = ast.get_docstring(ast.parse(open(init).read()))
+        except SyntaxError as e:
+            problems.append(f"{rel}: unparseable ({e})")
+            continue
+        if not doc or not doc.strip():
+            problems.append(f"{rel}: package has no module docstring")
+
+
+def main() -> int:
+    problems = []
+    check_links(problems)
+    check_file_refs(problems)
+    check_package_docstrings(problems)
+    for p in problems:
+        print(f"docs-lint: {p}")
+    n = len(_md_files())
+    print(f"docs-lint: {n} markdown files, "
+          f"{len(problems)} problem(s)")
+    return min(len(problems), 99)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,3 +1,9 @@
+"""Checkpoint store — timestamped generator/model snapshots on disk.
+
+`save_checkpoint` / `restore_checkpoint` back the paper's post-training
+convergence protocol (§VI-C2): the end-to-end driver periodically saves
+generator states with wall-clock metadata and restores the latest step.
+"""
 from .store import save_checkpoint, restore_checkpoint, latest_step
 
 __all__ = ["save_checkpoint", "restore_checkpoint", "latest_step"]

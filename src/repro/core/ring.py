@@ -14,6 +14,10 @@ Two implementations of the same `Comm` interface:
 
 Ring direction follows Algorithm 1: rank i *receives from* its predecessor
 i-1 ("Rank i receives gradients g_{i-1} from Rank i-1").
+
+`ship_outer` is the overlap mode's issue-point (see `core.sync`): the same
+outer-ring hop as `recv_ring_outer`, but its result is consumed one epoch
+later, so the pod-boundary transfer can overlap the next epoch's compute.
 """
 from __future__ import annotations
 
@@ -40,6 +44,16 @@ class Comm:
         raise NotImplementedError
 
     def recv_ring_outer(self, tree):
+        raise NotImplementedError
+
+    def ship_outer(self, tree):
+        """Issue-point of the overlapped pod-boundary transfer: move `tree`
+        one hop along the outer (slow-link) ring, like `recv_ring_outer`,
+        but with the contract that the RESULT IS NOT CONSUMED this epoch —
+        it lands in the overlap outer mailbox and is read at epoch t+1
+        (`sync._outer_exchange_overlapped`).  Keeping it a distinct method
+        lets backends mark the transfer for async scheduling without
+        touching the synchronous ring path."""
         raise NotImplementedError
 
     def pmean_all(self, tree):
@@ -80,6 +94,13 @@ class VmapComm(Comm):
             x = jnp.roll(x, 1, axis=0)
             return x.reshape((O * I,) + x.shape[2:])
         return jax.tree.map(f, tree)
+
+    def ship_outer(self, tree):
+        # simulated ranks share one device: the "transfer" is the same roll
+        # as recv_ring_outer; the overlap comes from deferring its consumer
+        # to the next epoch (so XLA is free to schedule it off the critical
+        # path of the scan body)
+        return self.recv_ring_outer(tree)
 
     def pmean_all(self, tree):
         return jax.tree.map(
@@ -123,6 +144,20 @@ class ShardComm(Comm):
             return tree
         perm = self._perm(self.n_outer)
         return jax.tree.map(lambda x: jax.lax.ppermute(x, self.outer_axis, perm), tree)
+
+    def ship_outer(self, tree):
+        """Pod-boundary collective-permute whose consumer is next epoch's
+        mailbox read.  The named scope tags the HLO so the transfer is
+        identifiable in profiles; because nothing in this epoch depends on
+        the result, XLA's latency-hiding scheduler can run the
+        collective-permute-start/done pair concurrently with the next
+        generator forward/backward pass."""
+        if self.n_outer == 1:
+            return tree
+        perm = self._perm(self.n_outer)
+        with jax.named_scope("sagips_overlap_ship_outer"):
+            return jax.tree.map(
+                lambda x: jax.lax.ppermute(x, self.outer_axis, perm), tree)
 
     def recv_ring_all(self, tree):
         """Global predecessor on the flattened (outer, inner) ring.

@@ -18,6 +18,12 @@ Sync-mode table:
     rma_arar_arar   inner ring        depth k   every h      sum
     dbtree          log2(R) stages    no        no           mean
 
+Orthogonally to the mode, `SyncConfig.overlap` pipelines the grouped
+modes' *outer* (pod-boundary) ring segment: the fused payload is shipped
+across the slow links at epoch t and consumed at epoch t+1, so the
+transfer overlaps the next epoch's generator forward/backward pass
+instead of blocking it (see "Overlapped pod-boundary exchange" below).
+
     ensemble        no communication (§IV-A)
     allreduce       synchronous mean all-reduce — the horovod baseline
     conv_arar       Tab. II "ARAR": global ring, no grouping, every epoch
@@ -37,7 +43,8 @@ window so slower ranks never block faster ones across k epochs of skew.
 Depth-k mailboxes are meaningless for the other modes, so `SyncConfig`
 raises on staleness > 1 outside rma_arar_arar.
 
-Tensor fusion (`SyncConfig.fuse_tensors`, default ON): the paper's §VII
+Tensor fusion (`SyncConfig.fuse_tensors`, default ON — the production
+path since PR 1, parity-pinned, not experimental): the paper's §VII
 names fusing the ring payload into ONE buffer per exchange as the next
 scaling step.  All ring modes (conv_arar / arar_arar / rma_arar_arar /
 dbtree) concatenate every mask-selected leaf into a single flat payload,
@@ -47,6 +54,25 @@ precomputed `FusionSpec` (built once at driver-construction time, see
 `workflow.make_epoch_fn_vmap` / `make_epoch_fn_shard`), so the hot path
 never re-derives offsets leaf-by-leaf.  Fused and unfused paths are
 bitwise-identical on `VmapComm` (pure elementwise permutes + adds).
+Both the fused payload and the depth-k mailbox live inside the donated
+epoch state (`donate_argnums` on every epoch factory), so XLA aliases
+the exchange buffers in place — no fresh [R, D] allocation per epoch.
+
+Overlapped pod-boundary exchange (`SyncConfig.overlap`, grouped ring
+modes with a fused payload): the synchronous schedule is "exchange then
+train" — every outer-ring epoch blocks on the pod-boundary transfer over
+the slow DCI links.  With overlap=True the outer segment becomes a
+depth-1 RMA mailbox ACROSS pods (`outer_mailbox`, stored in the payload's
+flat [D] layout): at epoch t each rank ships `ship_outer(payload_t)`
+into the mailbox, and the due outer combine at epoch t+1 reads the
+mailbox instead of this epoch's ring — a read that is exactly ONE epoch
+old and never blocks on the producer, so the slow-link DMA overlaps the
+next generator forward/backward pass.  The ship is gated to the epoch
+*before* each due outer epoch ((t + 1) % h == 0), so no extra traffic is
+issued between due epochs.  The intra-pod (fast) segment keeps its mode
+semantics untouched; staleness stays k-bounded (inner: k, outer: 1 on
+top of the h-period).  overlap=False is bitwise-identical to the
+pre-overlap engine (golden proxy1d test).
 
 Per §V-C only *weight* gradients ride the ring; bias gradients stay local
 (pass `mask` from `gan.weight_mask` — leaves where mask=False skip sync).
@@ -70,6 +96,10 @@ MODES = ("ensemble", "allreduce", "conv_arar", "arar_arar", "rma_arar_arar",
 # modes whose exchange rides the ring and therefore benefits from fusion
 RING_MODES = ("conv_arar", "arar_arar", "rma_arar_arar", "dbtree")
 
+# modes with a distinct inner/outer ring split — the only ones whose
+# pod-boundary segment can be overlapped (SyncConfig.overlap)
+GROUPED_MODES = ("arar_arar", "rma_arar_arar")
+
 
 @dataclasses.dataclass(frozen=True)
 class SyncConfig:
@@ -79,6 +109,8 @@ class SyncConfig:
     staleness: int = 1             # RMA mailbox depth k (paper: 1)
     fuse_tensors: bool = True      # paper §VII: fuse the ring payload into
     #                                ONE buffer per exchange (default ON)
+    overlap: bool = False          # pipeline the pod-boundary (outer ring)
+    #                                segment: ship at epoch t, consume at t+1
 
     def __post_init__(self):
         if self.mode not in MODES:
@@ -89,6 +121,16 @@ class SyncConfig:
             raise ValueError(
                 "staleness > 1 (depth-k RMA mailbox) is only meaningful for "
                 f"mode='rma_arar_arar', got mode={self.mode!r}")
+        if self.overlap and self.mode not in GROUPED_MODES:
+            raise ValueError(
+                "overlap pipelines the outer (pod-boundary) ring segment, "
+                f"which only the grouped modes {GROUPED_MODES} have; got "
+                f"mode={self.mode!r}")
+        if self.overlap and not self.fuse_tensors:
+            raise ValueError(
+                "overlap ships the FUSED payload across the pod boundary "
+                "(the outer mailbox is stored in the flat [D] layout); "
+                "set fuse_tensors=True")
 
 
 # ----------------------------------------------------------------------------
@@ -117,6 +159,7 @@ class FusionSpec:
     treedef: Any
     slots: Tuple[_LeafSlot, ...]
     total: int                     # D = sum of masked per-rank leaf sizes
+    payload_dtype: Any = jnp.float32   # dtype of the concatenated payload
 
     @classmethod
     def build(cls, example, mask) -> "FusionSpec":
@@ -130,7 +173,17 @@ class FusionSpec:
                                    off if m else -1, g.dtype))
             if m:
                 off += n
-        return cls(treedef, tuple(slots), off)
+        masked_dtypes = [s.dtype for s in slots if s.masked]
+        dtype = jnp.result_type(*masked_dtypes) if masked_dtypes \
+            else jnp.dtype(jnp.float32)
+        return cls(treedef, tuple(slots), off, dtype)
+
+    def zero_payload(self, n_ranks: Optional[int] = None):
+        """Zero flat ring payload in this spec's layout: [D] per rank, or
+        stacked [n_ranks, D].  Used to seed the overlap mode's pod-boundary
+        outer mailbox (the depth-1 RMA window across the slow links)."""
+        shape = (self.total,) if n_ranks is None else (n_ranks, self.total)
+        return jnp.zeros(shape, self.payload_dtype)
 
     def flatten(self, tree, stacked: bool):
         """Concatenate mask-selected leaves into the flat ring payload.
@@ -192,17 +245,62 @@ def _outer_exchange(comm: Comm, g, epoch, h, combine):
     return comm.mask_where(due & is_member, exchanged, g)
 
 
+def _outer_exchange_overlapped(comm: Comm, g, outer_mb, epoch, h, combine):
+    """Pipelined pod-boundary exchange: consume the mailbox, ship for t+1.
+
+    Two phases, both non-blocking w.r.t. the slow links:
+
+      consume — a due outer epoch (epoch % h == 0) combines the OUTER
+                MAILBOX, i.e. the predecessor pod's inner-synced payload
+                shipped at epoch-1 (exactly one epoch stale); warmup reads
+                the zero mailbox, mirroring the depth-k RMA warmup.
+      ship    — when the NEXT epoch is due ((epoch+1) % h == 0), this
+                epoch's inner-synced payload crosses the pod boundary via
+                `Comm.ship_outer` into the mailbox.  Its only consumer is
+                epoch+1's combine, so the transfer has the whole next
+                generator forward/backward pass to hide behind.
+
+    The ship rides a `lax.cond` (the predicate is epoch-derived, identical
+    on every rank, so the branch is SPMD-uniform): off-epochs genuinely
+    skip the collective instead of computing and discarding it — a
+    `jnp.where` gate would leave the slow-link permute in the per-epoch
+    HLO for all h epochs of each due cycle.
+
+    Returns (synced, new_outer_mailbox)."""
+    exchanged = jax.tree.map(lambda a, b: _comb(a, b, combine), g, outer_mb)
+    due = (epoch % h) == 0
+    is_member = comm.inner_index() == 0
+    synced = comm.mask_where(due & is_member, exchanged, g)
+    ship_due = ((epoch + 1) % h) == 0
+    new_outer_mb = jax.lax.cond(
+        ship_due, lambda t: comm.ship_outer(t), lambda t: outer_mb, g)
+    return synced, new_outer_mb
+
+
 def sync_gradients(comm: Comm, cfg: SyncConfig, grads, mailbox, epoch,
-                   mask=None, spec: Optional[FusionSpec] = None):
-    """Returns (synced_grads, new_mailbox).
+                   mask=None, spec: Optional[FusionSpec] = None,
+                   outer_mailbox=None):
+    """Returns (synced_grads, new_mailbox), or a 3-tuple
+    (synced_grads, new_mailbox, new_outer_mailbox) when `outer_mailbox`
+    is passed.
 
     `spec` is the cached FusionSpec for the fused path; when omitted (ad-hoc
     calls, tests) it is rebuilt from `grads`/`mask` on the fly.  `mailbox`
     carries the depth-k circular buffer when cfg.staleness > 1 (see
     `init_mailbox`); the depth axis sits after the rank axis on the stacked
     `VmapComm` layout and leads on the per-rank `ShardComm` layout.
+
+    `outer_mailbox` is the overlap mode's pod-boundary window in the flat
+    payload layout ([D] per rank, [R, D] stacked — see
+    `FusionSpec.zero_payload`).  It is required when cfg.overlap is set and
+    passes through untouched otherwise, so drivers can thread it
+    unconditionally (the epoch state keeps one static structure).
     """
     stacked = isinstance(comm, VmapComm)
+    if cfg.overlap and outer_mailbox is None:
+        raise ValueError(
+            "cfg.overlap=True needs the pod-boundary outer mailbox "
+            "(build it with FusionSpec.zero_payload)")
 
     # -- depth-k mailbox: read the slot deposited `staleness` epochs ago -----
     depth = cfg.staleness if cfg.mode == "rma_arar_arar" else 1
@@ -221,17 +319,23 @@ def sync_gradients(comm: Comm, cfg: SyncConfig, grads, mailbox, epoch,
             lambda x: jax.ShapeDtypeStruct(x.shape[1:], x.dtype)
             if stacked else jax.ShapeDtypeStruct(x.shape, x.dtype), grads)
         spec = FusionSpec.build(example, mask)
+    new_outer = outer_mailbox
     if fuse and spec.total > 0:     # all-False mask: nothing rides the ring
         # paper §VII: one fused ring payload instead of one transfer per
         # weight tensor
         fg = {"w": spec.flatten(grads, stacked)}
         fmb = {"w": spec.flatten(mb_slot, stacked)}
-        fsynced, fnew_mb = _sync_core(comm, cfg, fg, fmb, epoch, {"w": True})
+        # the outer mailbox is ALREADY stored flat — no per-epoch reshuffle
+        fomb = {"w": outer_mailbox} if cfg.overlap else None
+        fsynced, fnew_mb, fnew_omb = _sync_core(
+            comm, cfg, fg, fmb, epoch, {"w": True}, outer_mb=fomb)
         synced = spec.unflatten(fsynced["w"], grads, stacked)
         new_deposit = spec.unflatten(fnew_mb["w"], mb_slot, stacked)
+        if fnew_omb is not None:
+            new_outer = fnew_omb["w"]
     else:
-        synced, new_deposit = _sync_core(comm, cfg, grads, mb_slot, epoch,
-                                         mask)
+        synced, new_deposit, _ = _sync_core(comm, cfg, grads, mb_slot, epoch,
+                                            mask)
 
     # -- depth-k mailbox: deposit this epoch's fresh grads into the slot -----
     if depth > 1:
@@ -239,21 +343,27 @@ def sync_gradients(comm: Comm, cfg: SyncConfig, grads, mailbox, epoch,
             lambda full, new: jax.lax.dynamic_update_index_in_dim(
                 full, new.astype(full.dtype), slot, axis),
             mailbox, new_deposit)
+    else:
+        new_mailbox = new_deposit
+    if outer_mailbox is None:
         return synced, new_mailbox
-    return synced, new_deposit
+    return synced, new_mailbox, new_outer
 
 
 def _sync_core(comm: Comm, cfg: SyncConfig, grads, mailbox, epoch,
-               mask=None):
+               mask=None, outer_mb=None):
+    """Returns (synced, new_mailbox, new_outer_mb).  `outer_mb` is only
+    consumed/refreshed by the grouped modes under cfg.overlap; every other
+    path passes it through untouched."""
     mode, combine = cfg.mode, cfg.combine
     if mode == "ensemble":
-        return grads, mailbox
+        return grads, mailbox, outer_mb
     if mode == "allreduce":
-        return _masked(mask, comm.pmean_all(grads), grads), mailbox
+        return _masked(mask, comm.pmean_all(grads), grads), mailbox, outer_mb
     if mode == "conv_arar":
         recv = comm.recv_ring_all(grads)
         synced = jax.tree.map(lambda a, b: _comb(a, b, combine), grads, recv)
-        return _masked(mask, synced, grads), mailbox
+        return _masked(mask, synced, grads), mailbox, outer_mb
     if mode == "dbtree":
         # paper §VII future work (via [18]): log2(R)-stage tree exchange —
         # a FULL reduction per epoch in ppermute pairs (recursive doubling,
@@ -267,7 +377,7 @@ def _sync_core(comm: Comm, cfg: SyncConfig, grads, mailbox, epoch,
         # tree reduction accumulates the global SUM; normalize to the mean
         # so the mode is directly comparable to the allreduce baseline
         synced = jax.tree.map(lambda x: x / R, synced)
-        return _masked(mask, synced, grads), mailbox
+        return _masked(mask, synced, grads), mailbox, outer_mb
 
     if mode == "arar_arar":
         recv = comm.recv_ring_inner(grads)
@@ -284,5 +394,9 @@ def _sync_core(comm: Comm, cfg: SyncConfig, grads, mailbox, epoch,
         raise ValueError(f"unknown sync mode {mode!r}")
 
     if comm.n_outer > 1:
-        synced = _outer_exchange(comm, synced, epoch, cfg.h, combine)
-    return _masked(mask, synced, grads), new_mailbox
+        if cfg.overlap and outer_mb is not None:
+            synced, outer_mb = _outer_exchange_overlapped(
+                comm, synced, outer_mb, epoch, cfg.h, combine)
+        else:
+            synced = _outer_exchange(comm, synced, epoch, cfg.h, combine)
+    return _masked(mask, synced, grads), new_mailbox, outer_mb

@@ -5,7 +5,11 @@ Per epoch, each rank (§IV-B):
   2. runs the generator -> pipeline to produce synthetic events,
   3. trains its *local* discriminator (never synchronized),
   4. computes generator gradients through pipeline + discriminator,
-  5. exchanges generator *weight* gradients per the configured sync mode,
+  5. exchanges generator *weight* gradients per the configured sync mode
+     (fused single-buffer ring payload by default; with
+     `SyncConfig.overlap` the pod-boundary segment is shipped at epoch t
+     and consumed at t+1, overlapping the slow-link transfer with the
+     next epoch's compute — see `core.sync`),
   6. applies its Adam update (generator copies may drift — the ensemble
      response over ranks is the estimator, §VI-A).
 
@@ -13,9 +17,17 @@ Two drivers share the per-rank functions:
   * `train_vmap`     — R simulated ranks on one device (convergence studies)
   * `make_epoch_fn_shard` — shard_map over a mesh (production / dry-run)
 
+Both epoch factories DONATE the state argument (`donate_argnums=(0,)`,
+since PR 2): the fused ring payload, the depth-k RMA mailbox and the
+overlap outer mailbox all live inside the state pytree, so XLA aliases the
+exchange buffers in place instead of reallocating them every epoch
+(pinned by tests/test_problems.py::
+test_epoch_state_donation_aliases_exchange_buffers).
+
 The forward model is pluggable: `WorkflowConfig.problem` names a registered
 `repro.problems.InverseProblem`, and the GAN widths, sampler dispatch and
 residual metric all derive from it (default: the paper's 1D proxy app).
+See docs/architecture.md for the end-to-end tour.
 """
 from __future__ import annotations
 
@@ -56,9 +68,15 @@ class WorkflowConfig:
         return get_problem(self.problem)
 
 
-def init_rank_state(key, wcfg: WorkflowConfig):
+def init_rank_state(key, wcfg: WorkflowConfig, spec=None):
     """State of ONE rank (no leading rank axis); GAN widths derive from the
-    problem's param/observable dims."""
+    problem's param/observable dims.
+
+    `outer_mailbox` is the overlap mode's pod-boundary window in the fused
+    flat [D] payload layout; it is always present (zeros, untouched unless
+    `SyncConfig.overlap`) so the state structure is identical across sync
+    schedules.  `spec` is the cached FusionSpec sizing that window —
+    multi-rank callers (`init_state`) build it once and pass it in."""
     prob = wcfg.problem_obj
     kg, kd, kr = jax.random.split(key, 3)
     gen_p = gan.init_generator(kg, n_params=prob.n_params)
@@ -66,10 +84,13 @@ def init_rank_state(key, wcfg: WorkflowConfig):
     gen_opt = adam(wcfg.gen_lr).init(gen_p)
     disc_opt = adam(wcfg.disc_lr).init(disc_p)
     mailbox = sync_lib.init_mailbox(gen_p, staleness=wcfg.sync.staleness)
+    if spec is None:
+        _, spec = _mask_and_spec(wcfg)
     return {
         "gen": gen_p, "disc": disc_p,
         "gen_opt": gen_opt, "disc_opt": disc_opt,
-        "mailbox": mailbox, "rng": kr,
+        "mailbox": mailbox, "outer_mailbox": spec.zero_payload(),
+        "rng": kr,
         "epoch": jnp.zeros((), jnp.int32),
     }
 
@@ -81,7 +102,8 @@ def init_state(key, n_ranks: int, wcfg: WorkflowConfig, same_generator=True):
     of the generator weights to each rank"); discriminators are independent.
     """
     keys = jax.random.split(key, n_ranks)
-    states = [init_rank_state(k, wcfg) for k in keys]
+    _, spec = _mask_and_spec(wcfg)
+    states = [init_rank_state(k, wcfg, spec=spec) for k in keys]
     if same_generator:
         for s in states[1:]:
             s["gen"] = states[0]["gen"]
@@ -135,11 +157,13 @@ def rank_grads(state, data_local, wcfg: WorkflowConfig):
     return new_state, g_grads, metrics
 
 
-def rank_apply(state, synced_grads, new_mailbox, wcfg: WorkflowConfig):
+def rank_apply(state, synced_grads, new_mailbox, new_outer_mailbox,
+               wcfg: WorkflowConfig):
     """Steps 5–6: apply the synchronized generator update."""
     g_upd, gen_opt = adam(wcfg.gen_lr).update(synced_grads, state["gen_opt"])
     gen = jax.tree.map(lambda p, u: p + u, state["gen"], g_upd)
     return dict(state, gen=gen, gen_opt=gen_opt, mailbox=new_mailbox,
+                outer_mailbox=new_outer_mailbox,
                 epoch=state["epoch"] + 1)
 
 
@@ -169,11 +193,11 @@ def _epoch_body_vmap(comm, mask, spec, wcfg: WorkflowConfig):
         new_state, g_grads, metrics = jax.vmap(
             lambda s, d: rank_grads(s, d, wcfg))(state, data_per_rank)
         epoch_idx = new_state["epoch"][0]
-        synced, new_mailbox = sync_lib.sync_gradients(
+        synced, new_mailbox, new_outer = sync_lib.sync_gradients(
             comm, wcfg.sync, g_grads, new_state["mailbox"], epoch_idx, mask,
-            spec=spec)
-        out = jax.vmap(lambda s, g, m: rank_apply(s, g, m, wcfg))(
-            new_state, synced, new_mailbox)
+            spec=spec, outer_mailbox=new_state["outer_mailbox"])
+        out = jax.vmap(lambda s, g, m, o: rank_apply(s, g, m, o, wcfg))(
+            new_state, synced, new_mailbox, new_outer)
         return out, metrics
     return epoch
 
@@ -181,10 +205,11 @@ def _epoch_body_vmap(comm, mask, spec, wcfg: WorkflowConfig):
 def make_epoch_fn_vmap(n_outer: int, n_inner: int, wcfg: WorkflowConfig):
     """Epoch step over stacked state [R, ...]; data_per_rank [R, N, obs].
 
-    The state argument is DONATED: the fused ring payload and the depth-k
-    RMA mailbox live inside the state pytree, so donation lets XLA alias
-    the exchange buffers in place instead of allocating a fresh [R, D]
-    payload every epoch.  Callers must not reuse the state they pass in.
+    The state argument is DONATED: the fused ring payload, the depth-k
+    RMA mailbox and the overlap outer mailbox live inside the state pytree,
+    so donation lets XLA alias the exchange buffers in place instead of
+    allocating a fresh [R, D] payload every epoch.  Callers must not reuse
+    the state they pass in.
     """
     comm = VmapComm(n_outer, n_inner)
     mask, spec = _mask_and_spec(wcfg)
@@ -232,10 +257,10 @@ def make_epoch_fn_shard(mesh, wcfg: WorkflowConfig,
         # leading axis has local size 1 inside shard_map
         state1 = jax.tree.map(lambda x: x[0], state)
         new_state, g_grads, metrics = rank_grads(state1, data_local[0], wcfg)
-        synced, new_mailbox = sync_lib.sync_gradients(
+        synced, new_mailbox, new_outer = sync_lib.sync_gradients(
             comm, wcfg.sync, g_grads, new_state["mailbox"], new_state["epoch"],
-            mask, spec=fspec)
-        out = rank_apply(new_state, synced, new_mailbox, wcfg)
+            mask, spec=fspec, outer_mailbox=new_state["outer_mailbox"])
+        out = rank_apply(new_state, synced, new_mailbox, new_outer, wcfg)
         out = jax.tree.map(lambda x: x[None], out)
         metrics = jax.tree.map(lambda x: x[None], metrics)
         return out, metrics

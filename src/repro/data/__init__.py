@@ -1,3 +1,7 @@
+"""Data pipeline — batching helpers and the token-stream loader used by
+the seed's model-training scaffolding (the SAGIPS reference-event data
+lives with each `repro.problems` workload instead).
+"""
 from .pipeline import make_batch, batch_specs, TokenStream
 
 __all__ = ["make_batch", "batch_specs", "TokenStream"]

@@ -1,3 +1,8 @@
+"""General model zoo inherited from the seed (transformer / MoE / SSM
+blocks).  Not part of the SAGIPS solver stack — the GAN networks live in
+`repro.core.gan` — but reused by the architecture smoke tests and
+benchmarks.
+"""
 from .config import ModelConfig
 from . import layers, blocks, model, moe, ssm
 

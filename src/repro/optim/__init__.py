@@ -1,3 +1,7 @@
+"""Optimizers and LR schedules.  `adam` drives both SAGIPS networks
+(generator lr 1e-5, discriminator lr 1e-4 per §V-A); the rest back the
+seed's model-training scaffolding.
+"""
 from .optimizers import adam, adamw, sgd, apply_updates, global_norm, clip_by_global_norm
 from .schedules import constant, cosine_decay, linear_warmup_cosine
 

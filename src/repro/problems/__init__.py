@@ -26,44 +26,14 @@ Registered problems (see `available()`):
 
 ## Adding a new inverse problem
 
-1. Create `src/repro/problems/<name>.py` with a subclass of
-   `InverseProblem` defining the class attributes
-
-       name            registry key (also the CLI `--problem` value)
-       n_params        generator output dim (sigmoid-bounded unit cube)
-       obs_dim         per-event observable dim (discriminator input width)
-       noise_channels  uniform noise draws per event fed to `sample_events`
-
-   and the methods
-
-       true_params()                     loop-closure truth in (0,1)^n_params
-       sample_events(params, u, impl, interpret)
-                                         differentiable forward model:
-                                         params [K, n_params], u [K, E,
-                                         noise_channels] -> events
-                                         [K*E, obs_dim].  Gradients MUST
-                                         flow from events back to params —
-                                         the whole SAGIPS design hinges on
-                                         it.  `impl='pallas'` should route
-                                         the hot loop through
-                                         `repro.kernels.ops` when the model
-                                         has an inverse-CDF-shaped core.
-
-   `make_reference_data`, `residuals` and `mean_abs_residual` come from the
-   base class (override only if the defaults don't fit).
-
-2. Register an instance at the bottom of the module:
-
-       register(MyProblem())
-
-   and import the module in the `_register_builtin` list below.
-
-3. Hook it up: nothing else is required.  `WorkflowConfig(problem="<name>")`
-   threads it through both drivers, `examples/train_sagips_gan.py --problem
-   <name>` trains it, `benchmarks/weak_scaling.py --problem <name>` measures
-   it, and `scripts/check.sh --problems` runs the per-problem smoke tests
-   (gradient flow + fused/unfused exchange parity) against every registry
-   entry automatically.
+The full how-to lives in docs/adding-a-problem.md.  The short version:
+subclass `InverseProblem` in `src/repro/problems/<name>.py` (class attrs
+`name` / `n_params` / `obs_dim` / `noise_channels`, methods
+`true_params()` and a *differentiable* `sample_events(params, u, impl,
+interpret)`), call `register(MyProblem())` at the bottom of the module,
+and add the module to the `_register_builtin` import list below —
+drivers, CLIs, benchmarks and the `scripts/check.sh --problems` lane all
+pick it up from the registry with no further wiring.
 """
 from __future__ import annotations
 

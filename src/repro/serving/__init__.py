@@ -1,3 +1,6 @@
+"""Serving engine for the seed's model scaffolding (prefill/decode step
+factories).  Not used by the SAGIPS training workflow.
+"""
 from .engine import make_serve_step, make_prefill_fn, generate, serve_specs
 
 __all__ = ["make_serve_step", "make_prefill_fn", "generate", "serve_specs"]

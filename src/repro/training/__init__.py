@@ -1,3 +1,7 @@
+"""Generic train-step/trainer scaffolding from the seed, including the
+hierarchical (grouped-ring) trainer used by distributed-trainer tests.
+The SAGIPS epoch drivers live in `repro.core.workflow`.
+"""
 from .trainer import TrainConfig, Trainer, make_train_state, make_train_step
 
 __all__ = ["TrainConfig", "Trainer", "make_train_state", "make_train_step"]

@@ -1,0 +1,291 @@
+"""Tier-1 tests for the overlapped pod-boundary exchange (ISSUE 3 tentpole).
+
+Pins the overlap schedule's contract (see docs/architecture.md):
+  * overlapped outer-ring reads are EXACTLY one epoch old (ship at t,
+    consume at t+1), with the ship gated to the epoch before each due
+    outer epoch,
+  * the synchronous configuration stays bitwise-identical to the
+    pre-overlap engine (the golden proxy1d trajectory itself is pinned by
+    tests/test_problems.py::test_proxy1d_bitwise_identical_to_seed, which
+    runs the default overlap=False config),
+  * overlap degenerates bitwise to the fused-synchronous schedule whenever
+    no pod-boundary transfer happens (n_outer == 1, or the outer ring is
+    never due) — checked on proxy2d and linear_blur,
+  * epoch-state donation/aliasing survives the overlap threading,
+  * SyncConfig validation rejects meaningless overlap combinations.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import workflow
+from repro.core.ring import VmapComm
+from repro.core.sync import (FusionSpec, SyncConfig, init_mailbox,
+                             sync_gradients)
+from repro.core.workflow import WorkflowConfig
+
+O, I = 2, 2
+R = O * I
+MASK = {"w": True, "b": False}
+
+
+def grads_like(key, shape=(3, 4)):
+    ks = jax.random.split(jax.random.PRNGKey(key), 2)
+    return {"w": jax.random.normal(ks[0], (R,) + shape),
+            "b": jax.random.normal(ks[1], (R, shape[-1]))}
+
+
+def inner_sync(w):
+    """numpy reference: w_i + w_{i-1 mod I} within each inner group."""
+    x = np.asarray(w).reshape((O, I) + w.shape[1:])
+    x = x + np.roll(x, 1, axis=1)
+    return x.reshape(w.shape)
+
+
+def roll_outer(w):
+    x = np.asarray(w).reshape((O, I) + w.shape[1:])
+    x = np.roll(x, 1, axis=0)
+    return x.reshape(w.shape)
+
+
+def zero_outer_mailbox(g):
+    spec = FusionSpec.build(
+        jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape[1:], x.dtype), g),
+        MASK)
+    return spec.zero_payload(R)
+
+
+# ----------------------------------------------------------------------------
+# staleness: the overlapped outer read is exactly one epoch old
+
+
+def test_overlap_outer_read_is_exactly_one_epoch_old():
+    """With h=1 every epoch is due: epoch e's member combine must add the
+    outer-ring ship of epoch e-1's INNER-SYNCED payload — not epoch e's
+    (that would be synchronous) and not e-2's (staleness must be bounded
+    by 1)."""
+    comm = VmapComm(O, I)
+    cfg = SyncConfig(mode="arar_arar", h=1, overlap=True)
+    gs = [grads_like(key=10 + e) for e in range(5)]
+    omb = zero_outer_mailbox(gs[0])
+    member = (np.arange(R) % I == 0)[:, None, None]
+    for e in range(5):
+        out, _, omb = sync_gradients(comm, cfg, gs[e], init_mailbox(gs[e]),
+                                     jnp.asarray(e), MASK,
+                                     outer_mailbox=omb)
+        base = inner_sync(gs[e]["w"])
+        read = roll_outer(inner_sync(gs[e - 1]["w"])) if e >= 1 \
+            else np.zeros_like(base)                     # warmup: zero window
+        expect = np.where(member, base + read, base)
+        np.testing.assert_allclose(np.asarray(out["w"]), expect, rtol=1e-6,
+                                   err_msg=f"epoch {e}")
+        # biases never ride any ring (§V-C)
+        np.testing.assert_array_equal(np.asarray(out["b"]),
+                                      np.asarray(gs[e]["b"]))
+
+
+def test_overlap_ship_gated_to_epoch_before_due():
+    """h=3: ships happen only at epochs 2, 5, ... ((e+1) % h == 0); the due
+    combine at epoch 3 therefore reads epoch 2's payload, and no slow-link
+    traffic is issued between due epochs (the mailbox is frozen)."""
+    comm = VmapComm(O, I)
+    cfg = SyncConfig(mode="arar_arar", h=3, overlap=True)
+    gs = [grads_like(key=40 + e) for e in range(7)]
+    omb = zero_outer_mailbox(gs[0])
+    member = (np.arange(R) % I == 0)[:, None, None]
+    boxes = []
+    for e in range(7):
+        out, _, omb = sync_gradients(comm, cfg, gs[e], init_mailbox(gs[e]),
+                                     jnp.asarray(e), MASK,
+                                     outer_mailbox=omb)
+        boxes.append(np.asarray(omb))
+        base = inner_sync(gs[e]["w"])
+        if e % 3 == 0:
+            read = roll_outer(inner_sync(gs[e - 1]["w"])) if e else 0.0
+            expect = np.where(member, base + read, base)
+        else:
+            expect = base
+        np.testing.assert_allclose(np.asarray(out["w"]), expect, rtol=1e-6,
+                                   err_msg=f"epoch {e}")
+    # mailbox frozen except at ship epochs 2 and 5
+    np.testing.assert_array_equal(boxes[0], np.zeros_like(boxes[0]))
+    np.testing.assert_array_equal(boxes[1], boxes[0])
+    assert np.abs(boxes[2]).max() > 0                    # first ship
+    np.testing.assert_array_equal(boxes[3], boxes[2])
+    np.testing.assert_array_equal(boxes[4], boxes[2])
+    assert np.abs(boxes[5] - boxes[4]).max() > 0         # second ship
+
+
+def test_overlap_composes_with_depth_k_inner_mailbox():
+    """rma_arar_arar + overlap: inner reads stay exactly k epochs old while
+    the outer read is exactly one epoch old — overall staleness is
+    k-bounded on the fast links and 1-bounded on the slow links."""
+    k = 2
+    comm = VmapComm(O, I)
+    cfg = SyncConfig(mode="rma_arar_arar", h=1, staleness=k, overlap=True)
+    gs = [grads_like(key=70 + e) for e in range(6)]
+    mb = init_mailbox(gs[0], staleness=k, stacked=True)
+    omb = zero_outer_mailbox(gs[0])
+    member = (np.arange(R) % I == 0)[:, None, None]
+
+    def rma_inner(e):
+        """Inner-synced payload at epoch e: g_e + inner-ring deposit from
+        e-k (zero during warmup)."""
+        if e < k:
+            return np.asarray(gs[e]["w"])
+        x = np.asarray(gs[e - k]["w"]).reshape((O, I) + gs[e]["w"].shape[1:])
+        return np.asarray(gs[e]["w"]) + \
+            np.roll(x, 1, axis=1).reshape(gs[e]["w"].shape)
+
+    for e in range(6):
+        out, mb, omb = sync_gradients(comm, cfg, gs[e], mb, jnp.asarray(e),
+                                      MASK, outer_mailbox=omb)
+        base = rma_inner(e)
+        read = roll_outer(rma_inner(e - 1)) if e >= 1 else np.zeros_like(base)
+        expect = np.where(member, base + read, base)
+        np.testing.assert_allclose(np.asarray(out["w"]), expect, rtol=1e-6,
+                                   err_msg=f"epoch {e}")
+
+
+# ----------------------------------------------------------------------------
+# degeneration: overlap == fused-synchronous when no boundary transfer runs
+
+
+@pytest.mark.parametrize("name", ["proxy2d", "linear_blur"])
+def test_overlap_matches_fused_sync_without_pod_boundary(name):
+    """n_outer == 1: there is no slow link, so the overlap schedule must be
+    BITWISE identical to the fused-synchronous engine on every problem."""
+    _assert_overlap_matches_sync(name, n_outer=1, n_inner=4, h=2)
+
+
+def test_overlap_matches_fused_sync_when_outer_never_due():
+    """n_outer > 1 but no due outer epoch in the window (epoch 0 is always
+    due — both schedules fire there, differently — so start at epoch 1):
+    with h beyond the horizon neither a ship nor a consume fires and the
+    overlap engine must be bitwise the fused-synchronous one."""
+    comm = VmapComm(O, I)
+    gs = [grads_like(key=90 + e) for e in range(1, 6)]
+    omb = zero_outer_mailbox(gs[0])
+    for e, g in enumerate(gs, start=1):
+        sync_out, _ = sync_gradients(
+            comm, SyncConfig(mode="arar_arar", h=10_000), g,
+            init_mailbox(g), jnp.asarray(e), MASK)
+        ov_out, _, omb = sync_gradients(
+            comm, SyncConfig(mode="arar_arar", h=10_000, overlap=True), g,
+            init_mailbox(g), jnp.asarray(e), MASK, outer_mailbox=omb)
+        for a, b in zip(jax.tree.leaves(sync_out), jax.tree.leaves(ov_out)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    np.testing.assert_array_equal(np.asarray(omb),
+                                  np.zeros_like(np.asarray(omb)))
+
+
+def _assert_overlap_matches_sync(name, n_outer, n_inner, h):
+    from repro.problems import get_problem
+    data = get_problem(name).make_reference_data(jax.random.PRNGKey(9), 400)
+    gens = {}
+    for overlap in (False, True):
+        wcfg = WorkflowConfig(
+            problem=name, n_param_samples=8, events_per_sample=4,
+            sync=SyncConfig(mode="rma_arar_arar", h=h, overlap=overlap))
+        state, _ = workflow.train_vmap(jax.random.PRNGKey(0), wcfg, n_outer,
+                                       n_inner, 3, data)
+        gens[overlap] = state["gen"]
+    for a, b in zip(jax.tree.leaves(gens[False]), jax.tree.leaves(gens[True])):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# ----------------------------------------------------------------------------
+# drivers: overlap trains, diverges from sync when the boundary is hot,
+# and keeps the donated-state aliasing
+
+
+def test_overlap_trains_and_differs_from_sync_across_pods():
+    """With a hot pod boundary (h=1, n_outer=2) overlap is a genuinely
+    different (1-epoch-stale) schedule: finite training that does NOT
+    match the synchronous trajectory bit for bit."""
+    from repro.problems import get_problem
+    data = get_problem("proxy1d").make_reference_data(jax.random.PRNGKey(3),
+                                                      400)
+    gens = {}
+    for overlap in (False, True):
+        wcfg = WorkflowConfig(
+            problem="proxy1d", n_param_samples=8, events_per_sample=4,
+            sync=SyncConfig(mode="arar_arar", h=1, overlap=overlap))
+        state, _ = workflow.train_vmap(jax.random.PRNGKey(0), wcfg, 2, 2, 3,
+                                       data)
+        for leaf in jax.tree.leaves(state):
+            assert bool(jnp.all(jnp.isfinite(leaf.astype(jnp.float32))))
+        gens[overlap] = state["gen"]
+    assert any(
+        not np.array_equal(np.asarray(a), np.asarray(b))
+        for a, b in zip(jax.tree.leaves(gens[False]),
+                        jax.tree.leaves(gens[True])))
+
+
+def test_overlap_ship_is_conditional_in_lowered_epoch():
+    """The ship gate is a real `lax.cond`, not a discarded-result select:
+    off-epochs must SKIP the pod-boundary collective entirely, so the
+    lowered overlap epoch carries a conditional region that the
+    synchronous epoch does not."""
+    def lowered(overlap):
+        wcfg = WorkflowConfig(
+            problem="proxy1d", n_param_samples=8, events_per_sample=4,
+            sync=SyncConfig(mode="rma_arar_arar", h=3, overlap=overlap))
+        state = workflow.init_state(jax.random.PRNGKey(0), 4, wcfg)
+        data = wcfg.problem_obj.make_reference_data(jax.random.PRNGKey(1),
+                                                    200)
+        fn = workflow.make_epoch_fn_vmap(2, 2, wcfg)
+        return fn.lower(state, jnp.stack([data] * 4)).as_text()
+
+    assert lowered(True).count("stablehlo.case") == 1
+    assert lowered(False).count("stablehlo.case") == 0
+
+
+def test_overlap_epoch_keeps_state_donation_aliasing():
+    """ISSUE 3 requires donation/aliasing to stay intact: the overlap
+    epoch still marks every state leaf (outer mailbox included) for
+    input/output aliasing."""
+    wcfg = WorkflowConfig(
+        problem="proxy1d", n_param_samples=8, events_per_sample=4,
+        sync=SyncConfig(mode="rma_arar_arar", h=2, staleness=2, overlap=True))
+    state = workflow.init_state(jax.random.PRNGKey(0), 4, wcfg)
+    assert state["outer_mailbox"].ndim == 2         # stacked flat [R, D]
+    data = wcfg.problem_obj.make_reference_data(jax.random.PRNGKey(1), 200)
+    dpr = jnp.stack([data] * 4)
+    fn = workflow.make_epoch_fn_vmap(2, 2, wcfg)
+    txt = fn.lower(state, dpr).as_text()
+    assert txt.count("tf.aliasing_output") >= len(jax.tree.leaves(state))
+
+
+# ----------------------------------------------------------------------------
+# config surface
+
+
+def test_overlap_config_validation():
+    assert SyncConfig().overlap is False            # sync is the default
+    SyncConfig(mode="arar_arar", overlap=True)      # grouped + fused: fine
+    SyncConfig(mode="rma_arar_arar", staleness=3, overlap=True)
+    with pytest.raises(ValueError, match="grouped"):
+        SyncConfig(mode="conv_arar", overlap=True)
+    with pytest.raises(ValueError, match="grouped"):
+        SyncConfig(mode="allreduce", overlap=True)
+    with pytest.raises(ValueError, match="fuse_tensors"):
+        SyncConfig(mode="arar_arar", fuse_tensors=False, overlap=True)
+
+
+def test_overlap_requires_outer_mailbox():
+    comm = VmapComm(O, I)
+    g = grads_like(key=1)
+    cfg = SyncConfig(mode="arar_arar", overlap=True)
+    with pytest.raises(ValueError, match="outer mailbox"):
+        sync_gradients(comm, cfg, g, init_mailbox(g), jnp.asarray(0), MASK)
+
+
+def test_zero_payload_layouts():
+    spec = FusionSpec.build(
+        [{"w": jnp.zeros((3, 4)), "b": jnp.zeros((4,))}],
+        [{"w": True, "b": False}])
+    assert spec.zero_payload().shape == (12,)       # per-rank (ShardComm)
+    assert spec.zero_payload(8).shape == (8, 12)    # stacked (VmapComm)
+    assert spec.zero_payload().dtype == spec.payload_dtype
