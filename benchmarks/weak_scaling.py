@@ -55,12 +55,15 @@ from repro.problems import get_problem
 R = int(sys.argv[1]); mode = sys.argv[2]; h = int(sys.argv[3])
 fuse = len(sys.argv) > 4 and sys.argv[4] == "fuse"
 problem = sys.argv[5] if len(sys.argv) > 5 else "proxy1d"
-overlap = len(sys.argv) > 6 and sys.argv[6] == "overlap"
+schedule = sys.argv[6] if len(sys.argv) > 6 else "sync"
 n_outer = max(R // %d, 1); n_inner = min(R, %d)
 from repro.launch.mesh import make_mesh
 mesh = make_mesh((n_outer, n_inner), ("pod", "data"))
 wcfg = WorkflowConfig(sync=SyncConfig(mode=mode, h=h, fuse_tensors=fuse,
-                                      overlap=overlap),
+                                      overlap=schedule == "overlap",
+                                      adaptive=schedule == "adaptive",
+                                      staleness=4 if schedule == "adaptive"
+                                      else 1),
                       n_param_samples=64, events_per_sample=25,
                       problem=problem)
 fn, shardings = workflow.make_epoch_fn_shard(mesh, wcfg)
@@ -79,10 +82,9 @@ print("RESULT " + json.dumps(rep.as_dict()))
 
 
 def lower_epoch(R: int, mode: str, h: int, fuse: bool = False,
-                problem: str = "proxy1d", overlap: bool = False) -> dict:
+                problem: str = "proxy1d", schedule: str = "sync") -> dict:
     out = subprocess.run([sys.executable, "-c", _CHILD, str(R), mode, str(h),
-                          "fuse" if fuse else "nofuse", problem,
-                          "overlap" if overlap else "sync"],
+                          "fuse" if fuse else "nofuse", problem, schedule],
                          capture_output=True, text=True, timeout=600,
                          cwd=os.path.dirname(os.path.dirname(__file__)))
     for line in out.stdout.splitlines():
@@ -139,11 +141,13 @@ def model_epoch_time(rep: dict, mode: str, h: int, t_compute: float,
 
 def measure_fused_wall_time(ranks=(4, 8, 16), h=25, n_epochs=30,
                             warmup=5, out_path=None, problem="proxy1d",
-                            sync_mode="sync", reps=3):
+                            sync_mode="sync", reps=3, max_staleness=4):
     """Measured (not modeled) per-epoch wall time, fused vs unfused ring
-    payload, on the vmap rank simulator of this host; with
-    sync_mode='overlap' a third lane measures the overlapped pod-boundary
-    schedule (fused payload, ship at t / consume at t+1).
+    payload, on the vmap rank simulator of this host; sync_mode='overlap'
+    adds a lane measuring the overlapped pod-boundary schedule (fused
+    payload, ship at t / consume at t+1), and sync_mode='adaptive' adds
+    both that lane and the adaptive-staleness schedule (tag-driven k_eff
+    controller over a depth-`max_staleness` mailbox).
 
     Each lane runs `reps` back-to-back repetitions of `n_epochs` epochs and
     records the BEST (minimum) per-epoch time — the timeit convention:
@@ -170,8 +174,11 @@ def measure_fused_wall_time(ranks=(4, 8, 16), h=25, n_epochs=30,
 
     lanes = [("unfused", dict(fuse_tensors=False)),
              ("fused", dict(fuse_tensors=True))]
-    if sync_mode == "overlap":
+    if sync_mode in ("overlap", "adaptive"):
         lanes.append(("overlap", dict(fuse_tensors=True, overlap=True)))
+    if sync_mode == "adaptive":
+        lanes.append(("adaptive", dict(fuse_tensors=True, adaptive=True,
+                                       staleness=max_staleness)))
 
     data = get_problem(problem).make_reference_data(jax.random.PRNGKey(42),
                                                     2000)
@@ -198,7 +205,7 @@ def measure_fused_wall_time(ranks=(4, 8, 16), h=25, n_epochs=30,
                 jax.block_until_ready(m)
                 best = min(best, (time.perf_counter() - t0) / n_epochs)
             per_lane[lane] = best
-        row = {"ranks": R, "problem": problem,
+        row = {"ranks": R, "problem": problem, "schedule": sync_mode,
                "epoch_s_unfused": per_lane["unfused"],
                "epoch_s_fused": per_lane["fused"],
                "fused_speedup": per_lane["unfused"] / per_lane["fused"]}
@@ -210,11 +217,18 @@ def measure_fused_wall_time(ranks=(4, 8, 16), h=25, n_epochs=30,
             row["overlap_vs_fused"] = per_lane["overlap"] / per_lane["fused"]
             msg += (f"  overlap {per_lane['overlap']*1e3:8.2f} ms "
                     f"({row['overlap_vs_fused']:.2f}x fused)")
+        if "adaptive" in per_lane:
+            row["epoch_s_adaptive"] = per_lane["adaptive"]
+            row["adaptive_vs_fused"] = per_lane["adaptive"] / per_lane["fused"]
+            msg += (f"  adaptive {per_lane['adaptive']*1e3:8.2f} ms "
+                    f"({row['adaptive_vs_fused']:.2f}x fused)")
         rows.append(row)
         print(msg, flush=True)
     payload = {"benchmark": "weak_scaling_fused_exchange",
                "mode": "rma_arar_arar", "h": h, "n_epochs": n_epochs,
                "reps": reps, "problem": problem, "sync_mode": sync_mode,
+               "max_staleness": max_staleness if sync_mode == "adaptive"
+               else None,
                "backend": jax.default_backend(), "rows": rows}
     save_result("weak_scaling_fusion", payload)
     root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
@@ -230,22 +244,25 @@ def run(ranks=(4, 8, 16, 32, 64, 128, 256, 400), h=1000,
     if quick:
         ranks = (4, 8, 16)
     modes = ["conv_arar", "arar_arar", "rma_arar_arar", "allreduce",
-             "rma_arar_arar+fused", "rma_arar_arar+overlap", "dbtree"]
+             "rma_arar_arar+fused", "rma_arar_arar+overlap",
+             "rma_arar_arar+adaptive", "dbtree"]
     results = {}
     for mode_label in modes:
         mode, _, variant = mode_label.partition("+")
-        overlap = variant == "overlap"
+        schedule = variant if variant in ("overlap", "adaptive") else "sync"
         rows = []
         for R in ranks:
             R_eff = min(R, 512)
             rep = lower_epoch(R_eff, mode, h,
-                              fuse=(variant == "fused" or overlap),
-                              problem=problem, overlap=overlap)
+                              fuse=(variant == "fused"
+                                    or schedule != "sync"),
+                              problem=problem, schedule=schedule)
             t_ep = model_epoch_time(rep, mode, h, t_compute, R,
-                                    overlap=overlap)
+                                    overlap=schedule == "overlap")
             total = t_ep * n_epochs
             rate = R * disc_batch * n_epochs / total
             rows.append({"ranks": R, "problem": problem, "epoch_s": t_ep,
+                         "schedule": schedule,
                          "total_h": total / 3600, "analysis_rate": rate,
                          "collective_bytes": rep["total_collective_bytes"],
                          "collective_ops": rep["collective_ops"]})
@@ -268,11 +285,14 @@ if __name__ == "__main__":
     ap.add_argument("--fusion-wall-time", action="store_true",
                     help="measure fused-vs-unfused per-epoch wall time "
                          "(writes BENCH_weak_scaling.json)")
-    ap.add_argument("--sync-mode", choices=("sync", "overlap"),
+    ap.add_argument("--sync-mode", choices=("sync", "overlap", "adaptive"),
                     default="sync",
-                    help="with --fusion-wall-time: 'overlap' adds a third "
-                         "measured lane (pipelined pod-boundary exchange) "
-                         "and records it in BENCH_weak_scaling.json")
+                    help="with --fusion-wall-time: 'overlap' adds a "
+                         "measured lane for the pipelined pod-boundary "
+                         "exchange; 'adaptive' adds that lane AND the "
+                         "adaptive-staleness schedule (tag-driven k_eff "
+                         "controller); every BENCH row records the "
+                         "schedule it measured")
     a = ap.parse_args()
     if a.fusion_wall_time:
         measure_fused_wall_time(problem=a.problem, sync_mode=a.sync_mode)

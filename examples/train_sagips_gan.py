@@ -8,7 +8,13 @@ reports the final ensemble prediction against the problem's own truth.
 
     PYTHONPATH=src python examples/train_sagips_gan.py \
         --mode rma_arar_arar --ranks 8 --epochs 2000 --h 50 \
-        --problem proxy2d --ckpt-dir /tmp/sagips_ckpt
+        --problem proxy2d --checkpoint-dir /tmp/sagips_ckpt
+
+Sync schedules (`--sync-schedule`): `sync` blocks on every transfer,
+`overlap` pipelines the pod boundary, `adaptive` lets a measured-skew
+controller widen/narrow the RMA read depth up to `--max-staleness`.
+Full-state checkpoints land in `--checkpoint-dir` every `--ckpt-every`
+completed epochs; `--resume` continues bitwise from the newest one.
 """
 import argparse
 import time
@@ -16,7 +22,7 @@ import time
 import jax
 import numpy as np
 
-from repro.checkpoint import save_checkpoint
+from repro.checkpoint import restore_latest, save_checkpoint
 from repro.core import gan, workflow
 from repro.core.ensemble import ensemble_response
 from repro.core.sync import MODES, SyncConfig
@@ -36,16 +42,31 @@ def main():
     ap.add_argument("--h", type=int, default=50)
     ap.add_argument("--events", type=int, default=50_000)
     ap.add_argument("--param-samples", type=int, default=64)
-    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--checkpoint-dir", default=None,
+                    help="directory for FULL-state checkpoints (resume-"
+                         "capable, saved every --ckpt-every completed "
+                         "epochs at chunk boundaries)")
     ap.add_argument("--ckpt-every", type=int, default=500)
+    ap.add_argument("--resume", action="store_true",
+                    help="continue from the newest step_N under "
+                         "--checkpoint-dir (bitwise-identical to the "
+                         "uninterrupted run)")
     ap.add_argument("--staleness", type=int, default=1,
                     help="RMA mailbox depth k (rma_arar_arar only)")
-    ap.add_argument("--sync-mode", choices=("sync", "overlap"),
+    ap.add_argument("--sync-schedule",
+                    choices=("sync", "overlap", "adaptive",
+                             "adaptive-overlap"),
                     default="sync",
                     help="epoch schedule: 'sync' blocks on the pod-boundary "
                          "transfer; 'overlap' ships the outer-ring fused "
-                         "payload at epoch t and consumes it at t+1 "
-                         "(grouped modes only, 1-epoch-stale outer reads)")
+                         "payload at epoch t and consumes it at t+1; "
+                         "'adaptive' widens/narrows the RMA read depth "
+                         "k_eff in [1, --max-staleness] from measured "
+                         "per-rank skew (rma_arar_arar only); "
+                         "'adaptive-overlap' combines both")
+    ap.add_argument("--max-staleness", type=int, default=4,
+                    help="adaptive schedule: widest effective read depth "
+                         "k_max the controller may reach")
     ap.add_argument("--no-fuse", action="store_true",
                     help="disable the fused single-buffer ring payload")
     ap.add_argument("--chunk", type=int, default=0,
@@ -53,20 +74,27 @@ def main():
                          "(0: one chunk per report interval)")
     args = ap.parse_args()
 
+    adaptive = args.sync_schedule.startswith("adaptive")
+    overlap = args.sync_schedule.endswith("overlap")
+    if adaptive and args.mode != "rma_arar_arar":
+        ap.error("--sync-schedule adaptive needs --mode rma_arar_arar "
+                 "(the only mode with an RMA mailbox)")
     problem = get_problem(args.problem)
     n_inner = min(args.inner, args.ranks)
     n_outer = args.ranks // n_inner
     wcfg = WorkflowConfig(
-        sync=SyncConfig(mode=args.mode, h=args.h, staleness=args.staleness,
+        sync=SyncConfig(mode=args.mode, h=args.h,
+                        staleness=args.max_staleness if adaptive
+                        else args.staleness,
                         fuse_tensors=not args.no_fuse,
-                        overlap=args.sync_mode == "overlap"),
+                        overlap=overlap, adaptive=adaptive),
         n_param_samples=args.param_samples, events_per_sample=25,
         gen_lr=2e-4, disc_lr=5e-4, problem=args.problem)
 
     data = problem.make_reference_data(jax.random.PRNGKey(99), args.events)
     print(f"problem={args.problem} ({problem.n_params} params -> "
           f"{problem.obs_dim} observables) mode={args.mode} "
-          f"sync_mode={args.sync_mode} "
+          f"schedule={args.sync_schedule} "
           f"ranks={n_outer}x{n_inner} disc_batch={wcfg.disc_batch}")
 
     key = jax.random.PRNGKey(0)
@@ -80,7 +108,7 @@ def main():
         for k in sub_keys])
     report_every = max(args.epochs // 10, 1)
     chunk = args.chunk if args.chunk > 0 else report_every
-    if args.ckpt_dir:
+    if args.checkpoint_dir:
         # chunk boundaries must land on the checkpoint cadence: clamp to
         # the LARGEST divisor of --ckpt-every that fits, so no checkpoint
         # epoch is skipped and the scan chunks stay as big as possible
@@ -90,11 +118,22 @@ def main():
     # scan-chunked driver: one Python round-trip per `chunk` epochs
     run = workflow.make_chunk_runner(n_outer, n_inner, wcfg)
 
+    start = 0
+    if args.checkpoint_dir and args.resume:
+        restored, step = restore_latest(args.checkpoint_dir, state)
+        if restored is not None:
+            state, start = restored, step
+            print(f"resumed from {args.checkpoint_dir} at epoch {start}")
+
     noise = jax.random.normal(jax.random.PRNGKey(7), (256, gan.NOISE_DIM))
     t0 = time.time()
     for e, n in workflow.chunk_schedule(args.epochs, chunk):
-        state, metrics = run(state, data_per_rank, n)
         done, last = e + n, e + n - 1
+        if done <= start:          # covered by the restored checkpoint
+            continue
+        if e < start:              # checkpoint mid-chunk: run only the
+            e, n = start, done - start   # epochs past it
+        state, metrics = run(state, data_per_rank, n)
         if last // report_every > (e - 1) // report_every \
                 or done == args.epochs:
             p_hat, sigma = ensemble_response(state["gen"], noise)
@@ -103,13 +142,14 @@ def main():
             g_l = float(np.asarray(metrics["g_loss"][-1]).mean())
             print(f"epoch {last:6d}  mean|r̂|={r:.4f}  d_loss={d_l:.3f}  "
                   f"g_loss={g_l:.3f}  ({time.time()-t0:.0f}s)", flush=True)
-        # save after the first chunk (early restart point), then every
-        # --ckpt-every completed epochs, and at the end
-        if args.ckpt_dir and (e == 0 or done % args.ckpt_every == 0
-                              or done == args.epochs):
-            save_checkpoint(args.ckpt_dir, last, {"gen": state["gen"]},
+        # full resume-capable state every --ckpt-every completed epochs
+        # (chunk boundaries divide the cadence) and at the end
+        if args.checkpoint_dir and (done % args.ckpt_every == 0
+                                    or done == args.epochs):
+            save_checkpoint(args.checkpoint_dir, done, state,
                             metadata={"wall_s": time.time() - t0,
-                                      "problem": args.problem})
+                                      "problem": args.problem,
+                                      "schedule": args.sync_schedule})
 
     p_hat, sigma = ensemble_response(state["gen"], noise)
     truth = np.asarray(problem.true_params())

@@ -8,6 +8,9 @@
 #   scripts/check.sh --problems      # problems lane: per-problem smoke tests
 #                                    # (registry, gradient flow, fused/unfused
 #                                    # parity, golden proxy1d regression)
+#   scripts/check.sh --sync          # sync lane: strategy + overlap +
+#                                    # SyncSchedule/adaptive-staleness tests
+#                                    # on their own
 #   scripts/check.sh --docs          # docs lane: dead links, stale file
 #                                    # references, package docstrings
 #                                    # (scripts/docs_lint.py)
@@ -19,6 +22,12 @@ if [[ "${1:-}" == "--problems" ]]; then
     shift
     exec env PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
         python -m pytest -x -q tests/test_problems.py "$@"
+fi
+if [[ "${1:-}" == "--sync" ]]; then
+    shift
+    exec env PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
+        python -m pytest -x -q tests/test_sync.py tests/test_overlap.py \
+        tests/test_schedule.py "$@"
 fi
 if [[ "${1:-}" == "--docs" ]]; then
     shift

@@ -2,8 +2,13 @@
 
 `save_checkpoint` / `restore_checkpoint` back the paper's post-training
 convergence protocol (§VI-C2): the end-to-end driver periodically saves
-generator states with wall-clock metadata and restores the latest step.
+the FULL training state (generator, discriminator, optimizers, rng and
+the schedule-owned `state["sync"]` pytree) and `restore_latest` resumes
+from the newest `step_N` — bitwise-identical to the uninterrupted run
+(see `core.workflow.train_vmap`).
 """
-from .store import save_checkpoint, restore_checkpoint, latest_step
+from .store import (save_checkpoint, restore_checkpoint, restore_latest,
+                    latest_step)
 
-__all__ = ["save_checkpoint", "restore_checkpoint", "latest_step"]
+__all__ = ["save_checkpoint", "restore_checkpoint", "restore_latest",
+           "latest_step"]

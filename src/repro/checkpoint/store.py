@@ -55,6 +55,17 @@ def latest_step(directory: str) -> Optional[int]:
     return max(steps) if steps else None
 
 
+def restore_latest(directory: str, like_tree, shardings=None):
+    """Restore the newest `step_N` under `directory` into the structure of
+    `like_tree`.  Returns `(tree, step)`, or `(None, None)` when the
+    directory holds no checkpoint yet — callers (e.g. the train drivers'
+    `resume=True` path) fall back to their fresh state."""
+    step = latest_step(directory)
+    if step is None:
+        return None, None
+    return restore_checkpoint(directory, step, like_tree, shardings), step
+
+
 def restore_checkpoint(directory: str, step: int, like_tree, shardings=None):
     """Restore into the structure of `like_tree` (values replaced)."""
     import ml_dtypes

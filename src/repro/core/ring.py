@@ -18,6 +18,14 @@ i-1 ("Rank i receives gradients g_{i-1} from Rank i-1").
 `ship_outer` is the overlap mode's issue-point (see `core.sync`): the same
 outer-ring hop as `recv_ring_outer`, but its result is consumed one epoch
 later, so the pod-boundary transfer can overlap the next epoch's compute.
+
+Deposit tagging (`make_deposit_tag`): the adaptive staleness schedule
+(`core.sync.AdaptiveSchedule`) attaches the producer's epoch counter to
+every RMA-mailbox deposit.  The tag rides the exact same ring transfer as
+the payload (one extra int32 per rank — `recv_ring_inner` tree-maps over
+the (payload, tag) pair), so the consumer can compare the tag against its
+own epoch and observe how stale each deposit REALLY is, which is the
+skew signal the adaptive controller feeds on.
 """
 from __future__ import annotations
 
@@ -26,6 +34,22 @@ from typing import Optional
 
 import jax
 import jax.numpy as jnp
+
+
+def make_deposit_tag(epoch, n_ranks: Optional[int] = None):
+    """int32 epoch tag deposited alongside a ring payload.
+
+    The adaptive staleness controller measures per-rank completion skew by
+    tagging every RMA-mailbox deposit with the producing rank's epoch
+    counter; the reader's `epoch - tag` is the deposit's TRUE age.  In the
+    lock-step SPMD simulation every rank deposits at the same epoch (zero
+    skew); a genuinely asynchronous runtime would stamp each rank's own
+    free-running counter here.  `n_ranks=None` returns the per-rank scalar
+    (`ShardComm` layout); an int returns the stacked `[n_ranks]` vector
+    (`VmapComm` layout)."""
+    if n_ranks is None:
+        return jnp.asarray(epoch, jnp.int32)
+    return jnp.full((n_ranks,), epoch, jnp.int32)
 
 
 class Comm:

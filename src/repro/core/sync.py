@@ -1,11 +1,25 @@
 """Gradient-synchronization strategies — the SAGIPS contribution (Tab. II).
 
-Every strategy is a pure function
-    (grads, mailbox, epoch) -> (synced_grads, new_mailbox)
-evaluated per-rank (under a `Comm` backend).  `mailbox` models the RMA
-window: the buffer a rank's ring predecessor deposited on an earlier epoch
-(staleness >= 1) — reads never block on the producer, which is exactly the
-observable semantics of the paper's one-sided MPI windows (DESIGN.md §2).
+The stack has two layers since ISSUE 4:
+
+  * the STRATEGY layer (this docstring's tables): pure functions
+        (grads, mailbox, epoch) -> (synced_grads, new_mailbox)
+    evaluated per-rank under a `Comm` backend — `sync_gradients` and its
+    helpers, unchanged semantics since PR 1;
+  * the SCHEDULE layer (`SyncSchedule` / `make_schedule`): each schedule
+    owns `init_state(n_ranks) -> SyncState` (ONE pytree holding every
+    sync-side buffer — mailbox, outer mailbox, controller state) and a
+    single entry point
+        exchange(comm, grads, sync_state, epoch) -> (synced, new_state),
+    so drivers thread one opaque `state["sync"]` pytree instead of a
+    loose bag of positional buffers.  `StaticSchedule` covers every
+    config-time-fixed schedule (bitwise-pinned against the golden
+    trajectory); `AdaptiveSchedule` is the first dynamic one.
+
+`mailbox` models the RMA window: the buffer a rank's ring predecessor
+deposited on an earlier epoch (staleness >= 1) — reads never block on the
+producer, which is exactly the observable semantics of the paper's
+one-sided MPI windows (DESIGN.md §2).
 
 Sync-mode table:
 
@@ -17,6 +31,23 @@ Sync-mode table:
     arar_arar       inner ring        no        every h      sum
     rma_arar_arar   inner ring        depth k   every h      sum
     dbtree          log2(R) stages    no        no           mean
+
+Schedule table (orthogonal to the mode where noted):
+
+    schedule   config                      staleness
+    ---------  --------------------------  ---------------------------------
+    sync       SyncConfig() defaults       fixed: k inner (rma), 0 outer
+    overlap    overlap=True (grouped)      fixed: k inner, +1 outer
+    adaptive   adaptive=True (rma only)    dynamic: k_eff in [1, k_max]
+                                           inner, ship lead = k_eff outer
+
+Adaptive staleness (`SyncConfig.adaptive`, mode rma_arar_arar): every
+mailbox deposit carries the producer's epoch tag (`ring.make_deposit_tag`);
+the consumer EMA-smooths the observed deposit-age skew and widens/narrows
+the EFFECTIVE read depth k_eff ∈ [1, k_max] inside a max-depth circular
+mailbox (k_max = `SyncConfig.staleness`), stretching the overlap ship gate
+by the same amount.  Zero skew drives k_eff to 1, so the schedule
+degenerates bitwise to depth-1 rma_arar_arar.  See `AdaptiveSchedule`.
 
 Orthogonally to the mode, `SyncConfig.overlap` pipelines the grouped
 modes' *outer* (pod-boundary) ring segment: the fused payload is shipped
@@ -88,7 +119,7 @@ from typing import Any, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from .ring import Comm, VmapComm
+from .ring import Comm, VmapComm, make_deposit_tag
 
 MODES = ("ensemble", "allreduce", "conv_arar", "arar_arar", "rma_arar_arar",
          "dbtree")
@@ -106,11 +137,18 @@ class SyncConfig:
     mode: str = "arar_arar"
     h: int = 1000                  # outer-group update frequency (Tab. I)
     combine: str = "sum"           # Algorithm 1 uses sum
-    staleness: int = 1             # RMA mailbox depth k (paper: 1)
+    staleness: int = 1             # RMA mailbox depth k (paper: 1); with
+    #                                adaptive=True this is k_max, the WIDEST
+    #                                effective read depth the controller may
+    #                                reach
     fuse_tensors: bool = True      # paper §VII: fuse the ring payload into
     #                                ONE buffer per exchange (default ON)
     overlap: bool = False          # pipeline the pod-boundary (outer ring)
     #                                segment: ship at epoch t, consume at t+1
+    adaptive: bool = False         # adaptive staleness: widen/narrow the
+    #                                effective read depth k_eff in
+    #                                [1, staleness] from measured per-rank
+    #                                completion skew (deposit tags)
 
     def __post_init__(self):
         if self.mode not in MODES:
@@ -131,6 +169,15 @@ class SyncConfig:
                 "overlap ships the FUSED payload across the pod boundary "
                 "(the outer mailbox is stored in the flat [D] layout); "
                 "set fuse_tensors=True")
+        if self.adaptive and self.mode != "rma_arar_arar":
+            raise ValueError(
+                "adaptive staleness widens/narrows the RMA mailbox's "
+                "effective read depth, which only mode='rma_arar_arar' "
+                f"has; got mode={self.mode!r}")
+        if self.adaptive and not self.fuse_tensors:
+            raise ValueError(
+                "adaptive staleness stores its max-depth mailbox in the "
+                "fused flat [k_max, D] layout; set fuse_tensors=True")
 
 
 # ----------------------------------------------------------------------------
@@ -245,7 +292,8 @@ def _outer_exchange(comm: Comm, g, epoch, h, combine):
     return comm.mask_where(due & is_member, exchanged, g)
 
 
-def _outer_exchange_overlapped(comm: Comm, g, outer_mb, epoch, h, combine):
+def _outer_exchange_overlapped(comm: Comm, g, outer_mb, epoch, h, combine,
+                               ship_due=None):
     """Pipelined pod-boundary exchange: consume the mailbox, ship for t+1.
 
     Two phases, both non-blocking w.r.t. the slow links:
@@ -266,12 +314,19 @@ def _outer_exchange_overlapped(comm: Comm, g, outer_mb, epoch, h, combine):
     `jnp.where` gate would leave the slow-link permute in the per-epoch
     HLO for all h epochs of each due cycle.
 
+    `ship_due` overrides the ship gate's predicate (default: the static
+    schedule's "the NEXT epoch is due", `(epoch + 1) % h == 0`).  The
+    adaptive schedule passes its stretched, exactly-once-per-cycle gate
+    so a lagging producer pod gets up to k_eff epochs of compute to hide
+    the slow-link transfer behind (see `AdaptiveSchedule.exchange`).
+
     Returns (synced, new_outer_mailbox)."""
     exchanged = jax.tree.map(lambda a, b: _comb(a, b, combine), g, outer_mb)
     due = (epoch % h) == 0
     is_member = comm.inner_index() == 0
     synced = comm.mask_where(due & is_member, exchanged, g)
-    ship_due = ((epoch + 1) % h) == 0
+    if ship_due is None:
+        ship_due = ((epoch + 1) % h) == 0
     new_outer_mb = jax.lax.cond(
         ship_due, lambda t: comm.ship_outer(t), lambda t: outer_mb, g)
     return synced, new_outer_mb
@@ -351,10 +406,12 @@ def sync_gradients(comm: Comm, cfg: SyncConfig, grads, mailbox, epoch,
 
 
 def _sync_core(comm: Comm, cfg: SyncConfig, grads, mailbox, epoch,
-               mask=None, outer_mb=None):
+               mask=None, outer_mb=None, ship_due=None):
     """Returns (synced, new_mailbox, new_outer_mb).  `outer_mb` is only
     consumed/refreshed by the grouped modes under cfg.overlap; every other
-    path passes it through untouched."""
+    path passes it through untouched.  `ship_due` optionally overrides the
+    overlap ship gate's predicate (None = static schedule, ship one epoch
+    before due; the adaptive schedule passes its k_eff-stretched gate)."""
     mode, combine = cfg.mode, cfg.combine
     if mode == "ensemble":
         return grads, mailbox, outer_mb
@@ -396,7 +453,258 @@ def _sync_core(comm: Comm, cfg: SyncConfig, grads, mailbox, epoch,
     if comm.n_outer > 1:
         if cfg.overlap and outer_mb is not None:
             synced, outer_mb = _outer_exchange_overlapped(
-                comm, synced, outer_mb, epoch, cfg.h, combine)
+                comm, synced, outer_mb, epoch, cfg.h, combine,
+                ship_due=ship_due)
         else:
             synced = _outer_exchange(comm, synced, epoch, cfg.h, combine)
     return _masked(mask, synced, grads), new_mailbox, outer_mb
+
+
+# ----------------------------------------------------------------------------
+# SyncSchedule — the first-class schedule layer (ISSUE 4 tentpole)
+
+
+class SyncSchedule:
+    """A gradient-sync schedule: owns its SyncState and per-epoch exchange.
+
+    Every schedule is a (cfg, mask, spec) triple with two obligations:
+
+      * `init_state(n_ranks=None) -> SyncState` — the schedule-owned pytree
+        that rides inside the epoch state as `state["sync"]` (donated, so
+        the exchange buffers alias in place).  `n_ranks=None` builds the
+        per-rank layout (`ShardComm`); an int builds the stacked layout
+        (`VmapComm`, leading [R] axis).
+      * `exchange(comm, grads, sync_state, epoch) -> (synced, new_state)` —
+        the single per-epoch entry point; the schedule alone knows what
+        lives inside its state and which staleness/gating invariants hold.
+
+    Drivers thread ONE opaque pytree instead of the historical loose bag of
+    positional buffers (mailbox, outer_mailbox, spec, ...), so adding a
+    schedule no longer widens every signature in the stack.  Build
+    instances with `make_schedule`.
+    """
+
+    def __init__(self, cfg: SyncConfig, mask, spec: FusionSpec):
+        self.cfg, self.mask, self.spec = cfg, mask, spec
+
+    @property
+    def name(self) -> str:
+        raise NotImplementedError
+
+    def _grads_example(self, n_ranks: Optional[int] = None):
+        """Zero gradient tree in this schedule's layout, rebuilt from the
+        cached FusionSpec (slots carry every leaf's shape/dtype)."""
+        lead = () if n_ranks is None else (n_ranks,)
+        return jax.tree.unflatten(
+            self.spec.treedef,
+            [jnp.zeros(lead + s.shape, s.dtype) for s in self.spec.slots])
+
+    def init_state(self, n_ranks: Optional[int] = None):
+        raise NotImplementedError
+
+    def exchange(self, comm: Comm, grads, sync_state, epoch):
+        raise NotImplementedError
+
+
+class StaticSchedule(SyncSchedule):
+    """Config-time-fixed schedules: sync, fused, depth-k RMA, overlap, and
+    their combinations — the exchange arithmetic is exactly the historical
+    `sync_gradients` path, so every pre-existing schedule stays bitwise
+    identical to the golden proxy1d trajectory through the refactor.
+
+    SyncState = {"mailbox": <grads-shaped tree, depth-k axis when
+    staleness > 1>, "outer_mailbox": <flat [D] payload>}.
+    """
+
+    @property
+    def name(self) -> str:
+        return "overlap" if self.cfg.overlap else "sync"
+
+    def init_state(self, n_ranks: Optional[int] = None):
+        example = self._grads_example(n_ranks)
+        return {
+            "mailbox": init_mailbox(example, staleness=self.cfg.staleness,
+                                    stacked=n_ranks is not None),
+            "outer_mailbox": self.spec.zero_payload(n_ranks),
+        }
+
+    def exchange(self, comm: Comm, grads, sync_state, epoch):
+        synced, new_mb, new_omb = sync_gradients(
+            comm, self.cfg, grads, sync_state["mailbox"], epoch, self.mask,
+            spec=self.spec, outer_mailbox=sync_state["outer_mailbox"])
+        return synced, {"mailbox": new_mb, "outer_mailbox": new_omb}
+
+
+# adaptive controller constants: EMA smoothing of the observed skew, and
+# the (implicit, unit) gain mapping smoothed excess skew to extra depth
+ADAPT_ALPHA = 0.2
+
+
+def adaptive_k_eff(skew_ema, k_max: int):
+    """Effective read depth from the smoothed skew: 1 + round(ema), hard-
+    clipped to [1, k_max] — the controller can NEVER leave that interval,
+    whatever the skew sequence (property-tested)."""
+    return jnp.clip(jnp.round(1.0 + skew_ema), 1, k_max).astype(jnp.int32)
+
+
+def adaptive_controller_step(ctrl, observed_skew, k_max: int,
+                             alpha: float = ADAPT_ALPHA):
+    """One EMA update of the staleness controller (pure, jit-compatible).
+
+    `observed_skew` is the deviation of the measured deposit age from the
+    intended read depth (`epoch - tag - k_eff`): positive means producers
+    are lagging (reads come out staler than planned — widen the window so
+    they stop blocking), negative means the window is wider than the skew
+    requires (narrow it back toward fresh reads).
+    """
+    ema = (1.0 - alpha) * ctrl["skew_ema"] + alpha * observed_skew
+    return {"skew_ema": ema, "k_eff": adaptive_k_eff(ema, k_max)}
+
+
+class AdaptiveSchedule(SyncSchedule):
+    """Adaptive staleness (`SyncConfig.adaptive`, mode rma_arar_arar).
+
+    A jit-compatible controller keeps an EMA of per-rank completion skew —
+    the epoch-count delta observed through the mailbox's deposit tags
+    (`ring.make_deposit_tag`) — and widens/narrows the EFFECTIVE read
+    depth k_eff ∈ [1, k_max] inside a max-depth mailbox; under overlap the
+    ship gate's lead time stretches/shrinks with k_eff too.  Async-RED
+    (arXiv 2010.01446) proves bounded-staleness block-parallel convergence;
+    ParaGAN (arXiv 2411.03999) measures schedule adaptation to straggler
+    skew as the wall-clock lever — this schedule is the two combined.
+
+    SyncState (per-rank layout; stacked adds a leading [R]):
+      mailbox.payload  [k_max, D] fused flat circular buffer — slot e%k_max
+                       takes epoch e's deposit, slot (e-k_eff)%k_max is
+                       read (a deposit EXACTLY k_eff epochs old, since
+                       deposits land every epoch regardless of k_eff)
+      mailbox.tag      [k_max] int32 — the producer's epoch per slot
+                       (-1 = never written; such reads see the zero
+                       payload and contribute zero skew)
+      outer_mailbox    [D] — the overlap pod-boundary window (as static)
+      ctrl.skew_ema    f32 — EMA of the observed excess staleness
+      ctrl.k_eff       int32 — current effective depth, ALWAYS in
+                       [1, k_max]
+      ctrl.shipped_for int32 — the due outer epoch the last overlap ship
+                       served (-1 = none yet); makes the stretched ship
+                       gate fire exactly once per h-cycle even while
+                       k_eff moves
+
+    Staleness invariants: inner reads are exactly k_eff epochs old
+    (k_eff = 1 under zero skew, so the schedule degenerates bitwise to
+    depth-1 rma_arar_arar) and never older than k_max; the overlap outer
+    read is between 1 and `lead = clip(k_eff, 1, h)` epochs old — the
+    ship fires at the FIRST epoch within `lead` of the next due epoch
+    and `shipped_for` suppresses re-ships, so the window is refreshed
+    every cycle no matter how k_eff moves between epochs (at the latest
+    one epoch before due, since lead >= 1).
+    """
+
+    @property
+    def name(self) -> str:
+        return "adaptive"
+
+    @property
+    def k_max(self) -> int:
+        return self.cfg.staleness
+
+    def init_state(self, n_ranks: Optional[int] = None):
+        lead = () if n_ranks is None else (n_ranks,)
+        return {
+            "mailbox": {
+                "payload": jnp.zeros(lead + (self.k_max, self.spec.total),
+                                     self.spec.payload_dtype),
+                "tag": jnp.full(lead + (self.k_max,), -1, jnp.int32),
+            },
+            "outer_mailbox": self.spec.zero_payload(n_ranks),
+            "ctrl": {
+                "skew_ema": jnp.zeros(lead, jnp.float32),
+                "k_eff": jnp.ones(lead, jnp.int32),
+                "shipped_for": jnp.full(lead, -1, jnp.int32),
+            },
+        }
+
+    def exchange(self, comm: Comm, grads, sync_state, epoch):
+        cfg, spec, k_max = self.cfg, self.spec, self.k_max
+        stacked = isinstance(comm, VmapComm)
+        axis = 1 if stacked else 0
+        payload = sync_state["mailbox"]["payload"]
+        tags = sync_state["mailbox"]["tag"]
+        ctrl = sync_state["ctrl"]
+        if spec.total == 0:           # all-False mask: nothing rides the ring
+            return grads, sync_state
+
+        # -- read: the slot deposited exactly k_eff epochs ago ---------------
+        # (SPMD-uniform: the controller is pmean-reduced, so every rank
+        # holds the same k_eff; the stacked layout indexes rank 0's copy)
+        k_eff = ctrl["k_eff"][0] if stacked else ctrl["k_eff"]
+        slot_r = jnp.mod(epoch - k_eff, k_max)
+        mb_flat = jax.lax.dynamic_index_in_dim(payload, slot_r, axis,
+                                               keepdims=False)
+        tag_read = jax.lax.dynamic_index_in_dim(tags, slot_r, axis,
+                                                keepdims=False)
+
+        # -- controller: EMA the observed deposit-age skew -------------------
+        # lock-step SPMD runs observe zero skew (tags always equal
+        # epoch - k_eff); a free-running async runtime feeds real jitter in
+        # through the very same tags.  Unwritten slots (tag -1) are warmup:
+        # they read the zero payload and contribute zero skew.
+        observed = jnp.where(tag_read >= 0,
+                             (epoch - tag_read - k_eff).astype(jnp.float32),
+                             jnp.zeros_like(tag_read, jnp.float32))
+        skew = comm.pmean_all(observed)          # uniform across ranks
+        new_ctrl = adaptive_controller_step(
+            {"skew_ema": ctrl["skew_ema"], "k_eff": ctrl["k_eff"]},
+            skew, k_max)
+        new_k = new_ctrl["k_eff"][0] if stacked else new_ctrl["k_eff"]
+
+        # -- overlap ship gate: stretched by k_eff, exactly once per cycle --
+        # the ship fires at the FIRST epoch within `lead` of the next due
+        # outer epoch; `shipped_for` remembers which due epoch the last
+        # ship served, so a k_eff change mid-cycle can neither skip the
+        # cycle's ship nor issue it twice (lead >= 1 guarantees the gate
+        # opens at the latest one epoch before due — the static schedule).
+        shipped_for = ctrl["shipped_for"]
+        sf = shipped_for[0] if stacked else shipped_for
+        lead = jnp.clip(new_k, 1, cfg.h)
+        to_due = cfg.h - jnp.mod(epoch, cfg.h)   # epochs until next due
+        next_due = epoch + to_due
+        ship_now = (to_due <= lead) & (sf != next_due)
+        if cfg.overlap:
+            new_sf = jnp.where(ship_now, next_due, sf)
+            new_ctrl["shipped_for"] = jnp.broadcast_to(new_sf,
+                                                       shipped_for.shape)
+        else:                         # no pod-boundary pipeline: no ships
+            new_ctrl["shipped_for"] = shipped_for
+
+        # -- exchange on the fused flat payload (same core as static) -------
+        fg = {"w": spec.flatten(grads, stacked)}
+        fomb = {"w": sync_state["outer_mailbox"]} if cfg.overlap else None
+        fsynced, fdeposit, fnew_omb = _sync_core(
+            comm, cfg, fg, {"w": mb_flat}, epoch, {"w": True},
+            outer_mb=fomb, ship_due=ship_now)
+        synced = spec.unflatten(fsynced["w"], grads, stacked)
+        new_omb = fnew_omb["w"] if fnew_omb is not None \
+            else sync_state["outer_mailbox"]
+
+        # -- deposit: fresh ring-shifted payload + the producer's epoch tag --
+        tag_self = make_deposit_tag(epoch, comm.n_ranks if stacked else None)
+        dep_tag = comm.recv_ring_inner(tag_self)
+        slot_w = jnp.mod(epoch, k_max)
+        new_payload = jax.lax.dynamic_update_index_in_dim(
+            payload, fdeposit["w"].astype(payload.dtype), slot_w, axis)
+        new_tags = jax.lax.dynamic_update_index_in_dim(
+            tags, dep_tag, slot_w, axis)
+        return synced, {
+            "mailbox": {"payload": new_payload, "tag": new_tags},
+            "outer_mailbox": new_omb,
+            "ctrl": new_ctrl,
+        }
+
+
+def make_schedule(cfg: SyncConfig, mask, spec: FusionSpec) -> SyncSchedule:
+    """The schedule factory: `cfg.adaptive` picks AdaptiveSchedule, every
+    other configuration (sync / fused / depth-k / overlap) rides the
+    bitwise-pinned StaticSchedule."""
+    cls = AdaptiveSchedule if cfg.adaptive else StaticSchedule
+    return cls(cfg, mask, spec)

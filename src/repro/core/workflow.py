@@ -17,11 +17,17 @@ Two drivers share the per-rank functions:
   * `train_vmap`     — R simulated ranks on one device (convergence studies)
   * `make_epoch_fn_shard` — shard_map over a mesh (production / dry-run)
 
+Step 5 is owned by a `core.sync.SyncSchedule` (ISSUE 4): every sync-side
+buffer — the fused ring payload, the (depth-k or adaptive max-depth) RMA
+mailbox, the overlap outer mailbox and the adaptive controller state —
+lives inside ONE schedule-owned pytree at `state["sync"]`, and the epoch
+body calls the schedule's single `exchange(comm, grads, sync_state,
+epoch)` entry point.  Drivers never see individual mailboxes.
+
 Both epoch factories DONATE the state argument (`donate_argnums=(0,)`,
-since PR 2): the fused ring payload, the depth-k RMA mailbox and the
-overlap outer mailbox all live inside the state pytree, so XLA aliases the
-exchange buffers in place instead of reallocating them every epoch
-(pinned by tests/test_problems.py::
+since PR 2): the whole `state["sync"]` pytree rides inside the donated
+state, so XLA aliases the exchange buffers in place instead of
+reallocating them every epoch (pinned by tests/test_problems.py::
 test_epoch_state_donation_aliases_exchange_buffers).
 
 The forward model is pluggable: `WorkflowConfig.problem` names a registered
@@ -68,28 +74,27 @@ class WorkflowConfig:
         return get_problem(self.problem)
 
 
-def init_rank_state(key, wcfg: WorkflowConfig, spec=None):
+def init_rank_state(key, wcfg: WorkflowConfig, schedule=None):
     """State of ONE rank (no leading rank axis); GAN widths derive from the
     problem's param/observable dims.
 
-    `outer_mailbox` is the overlap mode's pod-boundary window in the fused
-    flat [D] payload layout; it is always present (zeros, untouched unless
-    `SyncConfig.overlap`) so the state structure is identical across sync
-    schedules.  `spec` is the cached FusionSpec sizing that window —
-    multi-rank callers (`init_state`) build it once and pass it in."""
+    `state["sync"]` is the configured `SyncSchedule`'s own pytree (RMA
+    mailbox, overlap outer mailbox, adaptive controller — whatever the
+    schedule needs); the structure is fixed per schedule, so drivers thread
+    it opaquely.  Multi-rank callers (`init_state`) build the schedule once
+    and pass it in."""
     prob = wcfg.problem_obj
     kg, kd, kr = jax.random.split(key, 3)
     gen_p = gan.init_generator(kg, n_params=prob.n_params)
     disc_p = gan.init_discriminator(kd, obs_dim=prob.obs_dim)
     gen_opt = adam(wcfg.gen_lr).init(gen_p)
     disc_opt = adam(wcfg.disc_lr).init(disc_p)
-    mailbox = sync_lib.init_mailbox(gen_p, staleness=wcfg.sync.staleness)
-    if spec is None:
-        _, spec = _mask_and_spec(wcfg)
+    if schedule is None:
+        schedule = make_schedule(wcfg)
     return {
         "gen": gen_p, "disc": disc_p,
         "gen_opt": gen_opt, "disc_opt": disc_opt,
-        "mailbox": mailbox, "outer_mailbox": spec.zero_payload(),
+        "sync": schedule.init_state(),
         "rng": kr,
         "epoch": jnp.zeros((), jnp.int32),
     }
@@ -102,8 +107,8 @@ def init_state(key, n_ranks: int, wcfg: WorkflowConfig, same_generator=True):
     of the generator weights to each rank"); discriminators are independent.
     """
     keys = jax.random.split(key, n_ranks)
-    _, spec = _mask_and_spec(wcfg)
-    states = [init_rank_state(k, wcfg, spec=spec) for k in keys]
+    schedule = make_schedule(wcfg)
+    states = [init_rank_state(k, wcfg, schedule=schedule) for k in keys]
     if same_generator:
         for s in states[1:]:
             s["gen"] = states[0]["gen"]
@@ -157,13 +162,12 @@ def rank_grads(state, data_local, wcfg: WorkflowConfig):
     return new_state, g_grads, metrics
 
 
-def rank_apply(state, synced_grads, new_mailbox, new_outer_mailbox,
-               wcfg: WorkflowConfig):
-    """Steps 5–6: apply the synchronized generator update."""
+def rank_apply(state, synced_grads, new_sync, wcfg: WorkflowConfig):
+    """Steps 5–6: apply the synchronized generator update.  `new_sync` is
+    the schedule's refreshed SyncState pytree (opaque to this layer)."""
     g_upd, gen_opt = adam(wcfg.gen_lr).update(synced_grads, state["gen_opt"])
     gen = jax.tree.map(lambda p, u: p + u, state["gen"], g_upd)
-    return dict(state, gen=gen, gen_opt=gen_opt, mailbox=new_mailbox,
-                outer_mailbox=new_outer_mailbox,
+    return dict(state, gen=gen, gen_opt=gen_opt, sync=new_sync,
                 epoch=state["epoch"] + 1)
 
 
@@ -178,26 +182,27 @@ def _gen_example(wcfg: WorkflowConfig):
                           jax.random.PRNGKey(0))
 
 
-def _mask_and_spec(wcfg: WorkflowConfig):
-    """Weight mask + cached FusionSpec, built once per driver construction
-    (never re-derived leaf-by-leaf inside the jitted epoch).  Derived from
-    the problem's generator shape — the FusionSpec/ring machinery itself
-    stays problem-agnostic."""
+def make_schedule(wcfg: WorkflowConfig) -> sync_lib.SyncSchedule:
+    """The configured `SyncSchedule`: weight mask + cached FusionSpec built
+    once per driver construction (never re-derived leaf-by-leaf inside the
+    jitted epoch), then handed to the schedule factory.  Derived from the
+    problem's generator shape — the schedule machinery itself stays
+    problem-agnostic."""
     example = _gen_example(wcfg)
     mask = gan.weight_mask(example)
-    return mask, sync_lib.FusionSpec.build(example, mask)
+    spec = sync_lib.FusionSpec.build(example, mask)
+    return sync_lib.make_schedule(wcfg.sync, mask, spec)
 
 
-def _epoch_body_vmap(comm, mask, spec, wcfg: WorkflowConfig):
+def _epoch_body_vmap(comm, schedule, wcfg: WorkflowConfig):
     def epoch(state, data_per_rank):
         new_state, g_grads, metrics = jax.vmap(
             lambda s, d: rank_grads(s, d, wcfg))(state, data_per_rank)
         epoch_idx = new_state["epoch"][0]
-        synced, new_mailbox, new_outer = sync_lib.sync_gradients(
-            comm, wcfg.sync, g_grads, new_state["mailbox"], epoch_idx, mask,
-            spec=spec, outer_mailbox=new_state["outer_mailbox"])
-        out = jax.vmap(lambda s, g, m, o: rank_apply(s, g, m, o, wcfg))(
-            new_state, synced, new_mailbox, new_outer)
+        synced, new_sync = schedule.exchange(
+            comm, g_grads, new_state["sync"], epoch_idx)
+        out = jax.vmap(lambda s, g, ns: rank_apply(s, g, ns, wcfg))(
+            new_state, synced, new_sync)
         return out, metrics
     return epoch
 
@@ -205,15 +210,15 @@ def _epoch_body_vmap(comm, mask, spec, wcfg: WorkflowConfig):
 def make_epoch_fn_vmap(n_outer: int, n_inner: int, wcfg: WorkflowConfig):
     """Epoch step over stacked state [R, ...]; data_per_rank [R, N, obs].
 
-    The state argument is DONATED: the fused ring payload, the depth-k
-    RMA mailbox and the overlap outer mailbox live inside the state pytree,
-    so donation lets XLA alias the exchange buffers in place instead of
-    allocating a fresh [R, D] payload every epoch.  Callers must not reuse
-    the state they pass in.
+    The state argument is DONATED: every sync-side buffer (the schedule's
+    whole `state["sync"]` pytree) lives inside the state, so donation lets
+    XLA alias the exchange buffers in place instead of allocating a fresh
+    [R, D] payload every epoch.  Callers must not reuse the state they
+    pass in.
     """
     comm = VmapComm(n_outer, n_inner)
-    mask, spec = _mask_and_spec(wcfg)
-    return jax.jit(_epoch_body_vmap(comm, mask, spec, wcfg),
+    schedule = make_schedule(wcfg)
+    return jax.jit(_epoch_body_vmap(comm, schedule, wcfg),
                    donate_argnums=(0,))
 
 
@@ -227,8 +232,8 @@ def make_chunk_fn_vmap(n_outer: int, n_inner: int, wcfg: WorkflowConfig,
     The state argument is donated (see `make_epoch_fn_vmap`).
     """
     comm = VmapComm(n_outer, n_inner)
-    mask, spec = _mask_and_spec(wcfg)
-    epoch = _epoch_body_vmap(comm, mask, spec, wcfg)
+    schedule = make_schedule(wcfg)
+    epoch = _epoch_body_vmap(comm, schedule, wcfg)
 
     def chunked(state, data_per_rank):
         def body(s, _):
@@ -251,16 +256,15 @@ def make_epoch_fn_shard(mesh, wcfg: WorkflowConfig,
     n_outer = mesh.shape[outer_axis] if outer_axis in mesh.axis_names else 1
     n_inner = mesh.shape[inner_axis]
     comm = ShardComm(n_outer, n_inner, outer_axis, inner_axis)
-    mask, fspec = _mask_and_spec(wcfg)
+    schedule = make_schedule(wcfg)
 
     def epoch(state, data_local):
         # leading axis has local size 1 inside shard_map
         state1 = jax.tree.map(lambda x: x[0], state)
         new_state, g_grads, metrics = rank_grads(state1, data_local[0], wcfg)
-        synced, new_mailbox, new_outer = sync_lib.sync_gradients(
-            comm, wcfg.sync, g_grads, new_state["mailbox"], new_state["epoch"],
-            mask, spec=fspec, outer_mailbox=new_state["outer_mailbox"])
-        out = rank_apply(new_state, synced, new_mailbox, new_outer, wcfg)
+        synced, new_sync = schedule.exchange(
+            comm, g_grads, new_state["sync"], new_state["epoch"])
+        out = rank_apply(new_state, synced, new_sync, wcfg)
         out = jax.tree.map(lambda x: x[None], out)
         metrics = jax.tree.map(lambda x: x[None], metrics)
         return out, metrics
@@ -301,7 +305,8 @@ def make_chunk_runner(n_outer: int, n_inner: int, wcfg: WorkflowConfig):
 
 def train_vmap(key, wcfg: WorkflowConfig, n_outer: int, n_inner: int,
                n_epochs: int, data, checkpoint_every: int = 0,
-               chunk: int = 0):
+               chunk: int = 0, checkpoint_dir: Optional[str] = None,
+               resume: bool = False):
     """Convergence-study driver: R = n_outer*n_inner simulated ranks.
 
     `data` [N, obs_dim] is the full reference set (from the configured
@@ -313,8 +318,21 @@ def train_vmap(key, wcfg: WorkflowConfig, n_outer: int, n_inner: int,
     Epochs run `chunk` at a time inside a single jitted `lax.scan`
     (default: `checkpoint_every`, else min(n_epochs, 64)), so the driver
     crosses the Python/device boundary once per chunk instead of once per
-    epoch.  Recorded history is identical to the per-epoch driver: epochs
-    where `e % checkpoint_every == 0` plus the final epoch.
+    epoch.  Recorded history: epochs where `e % checkpoint_every == 0`
+    plus the final epoch; with `checkpoint_every=0` the final epoch is
+    STILL recorded, so the history is never empty.
+
+    `checkpoint_dir` persists the FULL state pytree (generator,
+    discriminator, optimizers, rng, epoch counter and the whole
+    `state["sync"]` pytree) via `checkpoint.store` at every chunk boundary
+    that lands on the `checkpoint_every` cadence (and at the end);
+    `resume=True` restores the newest `step_N` and continues from epoch N
+    — the per-rank data split re-derives from `key` and everything else
+    lives in the saved state, so a resume from a chunk-aligned step is
+    BITWISE the uninterrupted run.  A checkpoint that landed off the
+    chunk grid (a final-epoch save) resumes exactly as many epochs as
+    remain, through a partial first chunk — same schedule, fp-identical
+    up to scan-partition fusion noise.
     """
     R = n_outer * n_inner
     key, k_sub = jax.random.split(key)
@@ -331,14 +349,33 @@ def train_vmap(key, wcfg: WorkflowConfig, n_outer: int, n_inner: int,
     chunk = max(1, min(chunk, n_epochs))
     run = make_chunk_runner(n_outer, n_inner, wcfg)
 
+    start = 0
+    if checkpoint_dir and resume:
+        from ..checkpoint.store import restore_latest
+        restored, step = restore_latest(checkpoint_dir, state)
+        if restored is not None:
+            state, start = restored, step
+
     hist = []
     for e, n in chunk_schedule(n_epochs, chunk):
+        done = e + n
+        if done <= start:          # chunk fully covered by the checkpoint
+            continue
+        if e < start:              # checkpoint landed mid-chunk (e.g. a
+            e, n = start, done - start   # final-epoch save): run only the
+        #                                  epochs past it, labels stay global
         state, metrics = run(state, data_per_rank, n)
-        if checkpoint_every:
-            for j in range(n):
-                ge = e + j
-                if ge % checkpoint_every == 0 or ge == n_epochs - 1:
-                    hist.append(jax.tree.map(lambda x: jnp.asarray(x[j]),
-                                             metrics))
+        for j in range(n):
+            ge = e + j
+            if (checkpoint_every and ge % checkpoint_every == 0) \
+                    or ge == n_epochs - 1:
+                hist.append(jax.tree.map(lambda x: jnp.asarray(x[j]),
+                                         metrics))
+        if checkpoint_dir and (done == n_epochs or (
+                checkpoint_every and done % checkpoint_every == 0)):
+            from ..checkpoint.store import save_checkpoint
+            save_checkpoint(checkpoint_dir, done, state,
+                            metadata={"epochs": done,
+                                      "problem": wcfg.problem})
     history = jax.tree.map(lambda *xs: jnp.stack(xs), *hist) if hist else {}
     return state, history

@@ -4,7 +4,7 @@ The test image has no network access and no `hypothesis` wheel, which used
 to kill collection of five test modules at import time.  This shim covers
 exactly the surface those tests use — `given`, `settings`, and the
 `strategies` constructors `integers` / `floats` / `sampled_from` /
-`booleans` — backed by *seeded* `random.Random` draws, so every run
+`booleans` / `lists` — backed by *seeded* `random.Random` draws, so every run
 replays the same examples (deterministic, unlike real hypothesis's
 database-driven shrinking, which we do not attempt).
 
@@ -58,6 +58,12 @@ class strategies:
     @staticmethod
     def booleans():
         return _Strategy(lambda rng: rng.random() < 0.5)
+
+    @staticmethod
+    def lists(elements: "_Strategy", min_size: int = 0, max_size: int = 10):
+        return _Strategy(
+            lambda rng: [elements.example(rng)
+                         for _ in range(rng.randint(min_size, max_size))])
 
 
 def settings(max_examples: int = 10, deadline=None, **_kw):

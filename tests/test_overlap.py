@@ -250,7 +250,8 @@ def test_overlap_epoch_keeps_state_donation_aliasing():
         problem="proxy1d", n_param_samples=8, events_per_sample=4,
         sync=SyncConfig(mode="rma_arar_arar", h=2, staleness=2, overlap=True))
     state = workflow.init_state(jax.random.PRNGKey(0), 4, wcfg)
-    assert state["outer_mailbox"].ndim == 2         # stacked flat [R, D]
+    # stacked flat [R, D], inside the schedule-owned state["sync"] pytree
+    assert state["sync"]["outer_mailbox"].ndim == 2
     data = wcfg.problem_obj.make_reference_data(jax.random.PRNGKey(1), 200)
     dpr = jnp.stack([data] * 4)
     fn = workflow.make_epoch_fn_vmap(2, 2, wcfg)

@@ -216,7 +216,7 @@ def test_epoch_state_donation_aliases_exchange_buffers():
         "state leaves are not marked for input/output aliasing"
 
     mailbox_bytes = sum(x.size * x.dtype.itemsize
-                        for x in jax.tree.leaves(state["mailbox"]))
+                        for x in jax.tree.leaves(state["sync"]["mailbox"]))
     state_bytes = sum(x.size * x.dtype.itemsize
                       for x in jax.tree.leaves(state))
     ma = lowered.compile().memory_analysis()
@@ -227,7 +227,7 @@ def test_epoch_state_donation_aliases_exchange_buffers():
 
     # donation is consumed at runtime: the input buffers are gone
     out, _ = fn(state, dpr)
-    leaf = jax.tree.leaves(state["mailbox"])[0]
+    leaf = jax.tree.leaves(state["sync"]["mailbox"])[0]
     with pytest.raises(RuntimeError):
         _ = np.asarray(leaf)
     for x in jax.tree.leaves(out):

@@ -23,25 +23,29 @@ from repro.launch.mesh import make_mesh
 mesh = make_mesh((2, 4), ("pod", "data"))
 data = pipeline.make_reference_data(jax.random.PRNGKey(42), 1000)
 out = {}
-# label: (mode, fuse_tensors, staleness, overlap) — default fused, plus
-# explicit unfused, depth-k mailbox and overlapped pod-boundary variants so
-# the fused engine's cross-backend equivalence is pinned on every code path
+# label: (mode, fuse_tensors, staleness, overlap, adaptive) — default fused,
+# plus explicit unfused, depth-k mailbox, overlapped pod-boundary and
+# adaptive-staleness variants so the fused engine's cross-backend
+# equivalence is pinned on every code path and every schedule
 combos = {
-    "allreduce": ("allreduce", True, 1, False),
-    "conv_arar": ("conv_arar", True, 1, False),
-    "arar_arar": ("arar_arar", True, 1, False),
-    "rma_arar_arar": ("rma_arar_arar", True, 1, False),
-    "ensemble": ("ensemble", True, 1, False),
-    "dbtree": ("dbtree", True, 1, False),
-    "arar_arar_unfused": ("arar_arar", False, 1, False),
-    "rma_arar_arar_unfused": ("rma_arar_arar", False, 1, False),
-    "rma_arar_arar_k2": ("rma_arar_arar", True, 2, False),
-    "arar_arar_overlap": ("arar_arar", True, 1, True),
-    "rma_arar_arar_overlap_k2": ("rma_arar_arar", True, 2, True),
+    "allreduce": ("allreduce", True, 1, False, False),
+    "conv_arar": ("conv_arar", True, 1, False, False),
+    "arar_arar": ("arar_arar", True, 1, False, False),
+    "rma_arar_arar": ("rma_arar_arar", True, 1, False, False),
+    "ensemble": ("ensemble", True, 1, False, False),
+    "dbtree": ("dbtree", True, 1, False, False),
+    "arar_arar_unfused": ("arar_arar", False, 1, False, False),
+    "rma_arar_arar_unfused": ("rma_arar_arar", False, 1, False, False),
+    "rma_arar_arar_k2": ("rma_arar_arar", True, 2, False, False),
+    "arar_arar_overlap": ("arar_arar", True, 1, True, False),
+    "rma_arar_arar_overlap_k2": ("rma_arar_arar", True, 2, True, False),
+    "rma_arar_arar_adaptive_k3": ("rma_arar_arar", True, 3, False, True),
+    "rma_adaptive_overlap_k2": ("rma_arar_arar", True, 2, True, True),
 }
-for label, (mode, fuse, k, overlap) in combos.items():
+for label, (mode, fuse, k, overlap, adaptive) in combos.items():
     wcfg = WorkflowConfig(sync=SyncConfig(mode=mode, h=2, fuse_tensors=fuse,
-                                          staleness=k, overlap=overlap),
+                                          staleness=k, overlap=overlap,
+                                          adaptive=adaptive),
                           n_param_samples=8, events_per_sample=4)
     R = 8
     state_v = workflow.init_state(jax.random.PRNGKey(0), R, wcfg)
