@@ -141,7 +141,8 @@ def model_epoch_time(rep: dict, mode: str, h: int, t_compute: float,
 
 def measure_fused_wall_time(ranks=(4, 8, 16), h=25, n_epochs=30,
                             warmup=5, out_path=None, problem="proxy1d",
-                            sync_mode="sync", reps=3, max_staleness=4):
+                            sync_mode="sync", reps=3, max_staleness=4,
+                            backend="vmap", proc_ranks=(2,)):
     """Measured (not modeled) per-epoch wall time, fused vs unfused ring
     payload, on the vmap rank simulator of this host; sync_mode='overlap'
     adds a lane measuring the overlapped pod-boundary schedule (fused
@@ -153,6 +154,17 @@ def measure_fused_wall_time(ranks=(4, 8, 16), h=25, n_epochs=30,
     records the BEST (minimum) per-epoch time — the timeit convention:
     scheduler noise on a shared host only ever ADDS time, so the min is the
     noise-robust estimate of the true cost.
+
+    Every row records which runtime `backend` produced it.  The vmap rows
+    (`backend='vmap'`) are the historical regression-gated series;
+    `backend='proc'` appends the MEASURED ASYNC lane: real
+    free-running worker processes over the `repro.runtime` mailbox fabric
+    (adaptive schedule, zero injected jitter), one row per entry of
+    `proc_ranks` — kept to the host's core count, since oversubscribed
+    free-running workers measure the scheduler, not the runtime.  Proc
+    rows record `epoch_s_proc` as the SLOWEST rank's best epoch time (the
+    ring's throughput bound) and are descriptive, not regression-gated
+    (see docs/benchmarks.md).
 
     Seeds the repo's BENCH_*.json series: writes BENCH_weak_scaling.json at
     the repo root (plus benchmarks/results/) with per-R epoch times, the
@@ -206,6 +218,7 @@ def measure_fused_wall_time(ranks=(4, 8, 16), h=25, n_epochs=30,
                 best = min(best, (time.perf_counter() - t0) / n_epochs)
             per_lane[lane] = best
         row = {"ranks": R, "problem": problem, "schedule": sync_mode,
+               "backend": "vmap",
                "epoch_s_unfused": per_lane["unfused"],
                "epoch_s_fused": per_lane["fused"],
                "fused_speedup": per_lane["unfused"] / per_lane["fused"]}
@@ -224,12 +237,50 @@ def measure_fused_wall_time(ranks=(4, 8, 16), h=25, n_epochs=30,
                     f"({row['adaptive_vs_fused']:.2f}x fused)")
         rows.append(row)
         print(msg, flush=True)
+
+    if backend == "proc":              # vmap lanes above + the async lane
+        if sync_mode != "adaptive":
+            raise ValueError(
+                "the proc async lane measures the adaptive schedule (its "
+                "point is measured k_eff under real skew); run with "
+                "--sync-mode adaptive so the payload's sync_mode/"
+                "max_staleness describe every row coherently")
+        from repro.runtime.launch import run_proc
+        for R in proc_ranks:
+            n_inner = min(R, GPUS_PER_NODE)
+            n_outer = max(R // n_inner, 1)
+            if n_outer * n_inner != R:
+                raise ValueError(
+                    f"proc rank count {R} does not factor as pods x "
+                    f"{GPUS_PER_NODE}; the row would misreport the "
+                    "measured configuration — pick a multiple of "
+                    f"{GPUS_PER_NODE} (or a value below it)")
+            wcfg = WorkflowConfig(
+                sync=SyncConfig(mode="rma_arar_arar", h=h,
+                                staleness=max_staleness, adaptive=True),
+                n_param_samples=32, events_per_sample=25, problem=problem)
+            out = run_proc(wcfg, n_outer, n_inner, n_epochs, data[:1000],
+                           seed=0, lockstep=False, timeout=900)
+            # the ring's throughput is bounded by its slowest rank
+            epoch_s = max(s["epoch_s_best"] for s in out["summaries"])
+            rows.append({
+                "ranks": R, "problem": problem, "schedule": "adaptive",
+                "backend": "proc", "epoch_s_proc": epoch_s,
+                "distributed": all(s["distributed"]
+                                   for s in out["summaries"]),
+                "max_k_eff": max(s["max_k_eff"]
+                                 for s in out["summaries"]),
+            })
+            print(f"  R={R:4d} proc (free-running async) "
+                  f"{epoch_s * 1e3:8.2f} ms/epoch  "
+                  f"distributed={rows[-1]['distributed']}", flush=True)
+
     payload = {"benchmark": "weak_scaling_fused_exchange",
                "mode": "rma_arar_arar", "h": h, "n_epochs": n_epochs,
                "reps": reps, "problem": problem, "sync_mode": sync_mode,
                "max_staleness": max_staleness if sync_mode == "adaptive"
                else None,
-               "backend": jax.default_backend(), "rows": rows}
+               "jax_platform": jax.default_backend(), "rows": rows}
     save_result("weak_scaling_fusion", payload)
     root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
     with open(out_path or os.path.join(root, "BENCH_weak_scaling.json"),
@@ -293,8 +344,20 @@ if __name__ == "__main__":
                          "adaptive-staleness schedule (tag-driven k_eff "
                          "controller); every BENCH row records the "
                          "schedule it measured")
+    ap.add_argument("--backend", choices=("vmap", "proc"), default="vmap",
+                    help="with --fusion-wall-time: 'proc' appends the "
+                         "measured async lane — real free-running worker "
+                         "processes over the repro.runtime mailbox "
+                         "fabric (adaptive schedule, zero injected "
+                         "jitter) at --proc-ranks; every BENCH row "
+                         "records its backend")
+    ap.add_argument("--proc-ranks", type=int, nargs="+", default=[2],
+                    help="rank counts for the proc async lane (keep "
+                         "within the host's core count)")
     a = ap.parse_args()
     if a.fusion_wall_time:
-        measure_fused_wall_time(problem=a.problem, sync_mode=a.sync_mode)
+        measure_fused_wall_time(problem=a.problem, sync_mode=a.sync_mode,
+                                backend=a.backend,
+                                proc_ranks=tuple(a.proc_ranks))
     else:
         run(quick=a.quick, problem=a.problem)

@@ -15,6 +15,18 @@ Sync schedules (`--sync-schedule`): `sync` blocks on every transfer,
 controller widen/narrow the RMA read depth up to `--max-staleness`.
 Full-state checkpoints land in `--checkpoint-dir` every `--ckpt-every`
 completed epochs; `--resume` continues bitwise from the newest one.
+
+Backends (`--backend`): `vmap` (default) simulates the ranks inside one
+SPMD program; `proc` spawns `--num-procs` REAL worker processes via
+`jax.distributed.initialize` and exchanges gradients through the
+`repro.runtime` one-sided mailbox fabric — add `--free-run` to let the
+ranks genuinely desynchronize (implied by any `--jitter-*` flag, which
+injects reproducible per-rank compute skew so the adaptive controller
+has measured staleness to react to):
+
+    PYTHONPATH=src python examples/train_sagips_gan.py \
+        --backend proc --num-procs 2 --mode rma_arar_arar \
+        --sync-schedule adaptive --jitter-rank-lag-ms 20 --epochs 200
 """
 import argparse
 import time
@@ -72,6 +84,24 @@ def main():
     ap.add_argument("--chunk", type=int, default=0,
                     help="epochs per jitted lax.scan chunk "
                          "(0: one chunk per report interval)")
+    ap.add_argument("--backend", choices=("vmap", "proc"), default="vmap",
+                    help="'vmap': R simulated ranks in one SPMD program; "
+                         "'proc': REAL worker processes over the "
+                         "repro.runtime mailbox fabric "
+                         "(jax.distributed on CPU)")
+    ap.add_argument("--num-procs", type=int, default=2,
+                    help="proc backend: number of worker processes "
+                         "(overrides --ranks)")
+    ap.add_argument("--free-run", action="store_true",
+                    help="proc backend: skip the lock-step rendezvous so "
+                         "ranks genuinely drift apart (one-sided reads "
+                         "take the latest deposit; implied by --jitter-*)")
+    ap.add_argument("--jitter-rank-lag-ms", type=float, default=0.0,
+                    help="proc backend: deterministic per-rank straggler "
+                         "skew — rank r sleeps r*LAG ms every epoch")
+    ap.add_argument("--jitter-noise-ms", type=float, default=0.0,
+                    help="proc backend: seeded uniform [0, NOISE) ms "
+                         "per-epoch sleep")
     args = ap.parse_args()
 
     adaptive = args.sync_schedule.startswith("adaptive")
@@ -92,6 +122,65 @@ def main():
         gen_lr=2e-4, disc_lr=5e-4, problem=args.problem)
 
     data = problem.make_reference_data(jax.random.PRNGKey(99), args.events)
+
+    if args.backend == "proc":
+        from repro.runtime import JitterConfig
+        from repro.runtime.launch import run_proc
+        R = args.num_procs
+        n_inner = min(args.inner, R)
+        if R % n_inner:
+            ap.error(f"--num-procs {R} must be divisible by the inner "
+                     f"group size {n_inner} (set --inner accordingly); "
+                     "anything else would silently launch fewer workers")
+        n_outer = R // n_inner
+        jitter = None
+        if args.jitter_rank_lag_ms > 0 or args.jitter_noise_ms > 0:
+            jitter = JitterConfig(rank_lag_ms=args.jitter_rank_lag_ms,
+                                  noise_ms=args.jitter_noise_ms)
+        lockstep = not (args.free_run or jitter is not None)
+        print(f"problem={args.problem} mode={args.mode} "
+              f"schedule={args.sync_schedule} backend=proc "
+              f"procs={n_outer}x{n_inner} "
+              f"{'lock-step' if lockstep else 'FREE-RUNNING'} "
+              f"jitter={jitter}")
+        t0 = time.time()
+        out = run_proc(wcfg, n_outer, n_inner, args.epochs, data, seed=0,
+                       lockstep=lockstep, jitter=jitter,
+                       run_dir=args.checkpoint_dir,
+                       ckpt_every=args.ckpt_every if args.checkpoint_dir
+                       else 0,
+                       resume=args.resume)
+        h = out["history"]
+        for s in out["summaries"]:
+            best = (f"best {1e3 * s['epoch_s_best']:.1f} ms/epoch"
+                    if s["epoch_s_best"] is not None
+                    else "no new epochs")     # resume already complete
+            msg = (f"  rank {s['rank']}: {s['n_epochs'] - s['start_epoch']} "
+                   f"epochs in {s['wall_s']:.1f}s "
+                   f"({best}, distributed={s['distributed']})")
+            if wcfg.sync.adaptive:
+                msg += (f" max_skew_ema={s['max_skew_ema']:.2f} "
+                        f"max_k_eff={s['max_k_eff']}")
+            print(msg)
+        if len(h.get("d_loss", ())):
+            d_l = float(np.asarray(h["d_loss"][-1]).mean())
+            g_l = float(np.asarray(h["g_loss"][-1]).mean())
+            print(f"final  d_loss={d_l:.3f}  g_loss={g_l:.3f}  "
+                  f"({time.time() - t0:.0f}s)")
+        else:
+            print(f"checkpoint already covers --epochs {args.epochs}; "
+                  f"restored final state without training "
+                  f"({time.time() - t0:.0f}s)")
+        noise = jax.random.normal(jax.random.PRNGKey(7),
+                                  (256, gan.NOISE_DIM))
+        p_hat, sigma = ensemble_response(out["state"]["gen"], noise)
+        truth = np.asarray(problem.true_params())
+        print("\nfinal ensemble prediction vs truth:")
+        for i in range(problem.n_params):
+            print(f"  p{i}: {float(p_hat[i]):.4f} ± {float(sigma[i]):.4f} "
+                  f"(truth {float(truth[i]):.4f})")
+        return
+
     print(f"problem={args.problem} ({problem.n_params} params -> "
           f"{problem.obs_dim} observables) mode={args.mode} "
           f"schedule={args.sync_schedule} "

@@ -11,6 +11,10 @@
 #   scripts/check.sh --sync          # sync lane: strategy + overlap +
 #                                    # SyncSchedule/adaptive-staleness tests
 #                                    # on their own
+#   scripts/check.sh --runtime       # runtime lane: the multi-process
+#                                    # proc backend (mailbox fabric units +
+#                                    # 2-process jax.distributed parity and
+#                                    # measured-skew integration tests)
 #   scripts/check.sh --docs          # docs lane: dead links, stale file
 #                                    # references, package docstrings
 #                                    # (scripts/docs_lint.py)
@@ -28,6 +32,11 @@ if [[ "${1:-}" == "--sync" ]]; then
     exec env PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
         python -m pytest -x -q tests/test_sync.py tests/test_overlap.py \
         tests/test_schedule.py "$@"
+fi
+if [[ "${1:-}" == "--runtime" ]]; then
+    shift
+    exec env PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
+        python -m pytest -x -q tests/test_runtime.py "$@"
 fi
 if [[ "${1:-}" == "--docs" ]]; then
     shift

@@ -4,11 +4,13 @@
 convergence protocol (§VI-C2): the end-to-end driver periodically saves
 the FULL training state (generator, discriminator, optimizers, rng and
 the schedule-owned `state["sync"]` pytree) and `restore_latest` resumes
-from the newest `step_N` — bitwise-identical to the uninterrupted run
-(see `core.workflow.train_vmap`).
+from the newest *loadable* `step_N` — bitwise-identical to the
+uninterrupted run (see `core.workflow.train_vmap`), skipping over a
+truncated/corrupt newest step (a worker process killed mid-save must not
+brick the resume — the proc runtime's crash contract).
 """
 from .store import (save_checkpoint, restore_checkpoint, restore_latest,
-                    latest_step)
+                    latest_step, list_steps)
 
 __all__ = ["save_checkpoint", "restore_checkpoint", "restore_latest",
-           "latest_step"]
+           "latest_step", "list_steps"]

@@ -47,23 +47,63 @@ def save_checkpoint(directory: str, step: int, tree, metadata: Optional[dict] = 
     return path
 
 
-def latest_step(directory: str) -> Optional[int]:
+def list_steps(directory: str):
+    """All `step_N` numbers under `directory`, ascending (empty if none)."""
     if not os.path.isdir(directory):
-        return None
-    steps = [int(m.group(1)) for d in os.listdir(directory)
-             if (m := re.fullmatch(r"step_(\d+)", d))]
-    return max(steps) if steps else None
+        return []
+    return sorted(int(m.group(1)) for d in os.listdir(directory)
+                  if (m := re.fullmatch(r"step_(\d+)", d)))
 
 
-def restore_latest(directory: str, like_tree, shardings=None):
-    """Restore the newest `step_N` under `directory` into the structure of
-    `like_tree`.  Returns `(tree, step)`, or `(None, None)` when the
-    directory holds no checkpoint yet — callers (e.g. the train drivers'
-    `resume=True` path) fall back to their fresh state."""
-    step = latest_step(directory)
-    if step is None:
-        return None, None
-    return restore_checkpoint(directory, step, like_tree, shardings), step
+def latest_step(directory: str) -> Optional[int]:
+    steps = list_steps(directory)
+    return steps[-1] if steps else None
+
+
+def _corrupt_checkpoint_errors():
+    """Error classes a process killed mid-save can leave behind: truncated
+    or garbage zip members, a half-written meta.json, missing files.  A
+    STRUCTURAL mismatch (the caller's like_tree no longer matches the
+    saved keys/shapes — e.g. a changed model config) deliberately stays
+    outside this set: that is a caller bug and must raise loudly, not be
+    silently skipped as corruption."""
+    import json
+    import zipfile
+    import zlib
+    return (OSError, EOFError, zlib.error, zipfile.BadZipFile,
+            json.JSONDecodeError)
+
+
+def restore_latest(directory: str, like_tree, shardings=None,
+                   max_step: Optional[int] = None):
+    """Restore the newest *loadable* `step_N` under `directory` into the
+    structure of `like_tree`.  Returns `(tree, step)`, or `(None, None)`
+    when the directory holds no restorable checkpoint — callers (e.g. the
+    train drivers' `resume=True` path) fall back to their fresh state.
+
+    Crash resilience: a process killed mid-save leaves a truncated
+    `arrays.npz` / missing or half-written `meta.json` in its newest
+    `step_N` — that must not brick the resume, so every step that fails
+    with a CORRUPTION error (`_corrupt_checkpoint_errors`) is skipped
+    with a warning and the NEXT-newest is tried.  Structural mismatches
+    (missing keys, wrong shapes — i.e. `like_tree` no longer matches
+    what was saved) propagate instead of being silently discarded.
+    `max_step` restricts the search to steps <= max_step (the proc
+    runtime's resume negotiation: every worker must restart from the
+    same epoch, so the launcher caps everyone at the newest step
+    loadable by ALL ranks)."""
+    import warnings
+    for step in reversed(list_steps(directory)):
+        if max_step is not None and step > max_step:
+            continue
+        try:
+            return restore_checkpoint(directory, step, like_tree,
+                                      shardings), step
+        except _corrupt_checkpoint_errors() as e:   # killed mid-save
+            warnings.warn(f"checkpoint step_{step} in {directory} failed to "
+                          f"load ({type(e).__name__}: {e}); falling back to "
+                          "the previous step")
+    return None, None
 
 
 def restore_checkpoint(directory: str, step: int, like_tree, shardings=None):

@@ -80,6 +80,18 @@ class Comm:
         touching the synchronous ring path."""
         raise NotImplementedError
 
+    def cond_ship(self, ship_due, tree, fallback):
+        """`ship_outer(tree)` when `ship_due` else `fallback` — the overlap
+        ship gate.  The SPMD backends ride a `lax.cond` (the predicate is
+        epoch-derived and identical on every rank, so the branch is
+        uniform): off-epochs genuinely skip the collective instead of
+        computing and discarding it.  Host-side backends (the proc
+        runtime's `ProcComm`) override this with a plain Python branch —
+        their mailbox I/O cannot be traced through `lax.cond`'s abstract
+        evaluation of both branches."""
+        return jax.lax.cond(
+            ship_due, lambda t: self.ship_outer(t), lambda t: fallback, tree)
+
     def pmean_all(self, tree):
         raise NotImplementedError
 

@@ -327,8 +327,7 @@ def _outer_exchange_overlapped(comm: Comm, g, outer_mb, epoch, h, combine,
     synced = comm.mask_where(due & is_member, exchanged, g)
     if ship_due is None:
         ship_due = ((epoch + 1) % h) == 0
-    new_outer_mb = jax.lax.cond(
-        ship_due, lambda t: comm.ship_outer(t), lambda t: outer_mb, g)
+    new_outer_mb = comm.cond_ship(ship_due, g, outer_mb)
     return synced, new_outer_mb
 
 
@@ -406,12 +405,16 @@ def sync_gradients(comm: Comm, cfg: SyncConfig, grads, mailbox, epoch,
 
 
 def _sync_core(comm: Comm, cfg: SyncConfig, grads, mailbox, epoch,
-               mask=None, outer_mb=None, ship_due=None):
+               mask=None, outer_mb=None, ship_due=None, deposit=None):
     """Returns (synced, new_mailbox, new_outer_mb).  `outer_mb` is only
     consumed/refreshed by the grouped modes under cfg.overlap; every other
     path passes it through untouched.  `ship_due` optionally overrides the
     overlap ship gate's predicate (None = static schedule, ship one epoch
-    before due; the adaptive schedule passes its k_eff-stretched gate)."""
+    before due; the adaptive schedule passes its k_eff-stretched gate).
+    `deposit` optionally overrides the rma mode's fresh mailbox deposit
+    (None = receive it here via `recv_ring_inner(grads)`; the adaptive
+    schedule pre-fetches it in ONE bundled transfer with the epoch tag so
+    that one-sided backends deliver payload and tag atomically)."""
     mode, combine = cfg.mode, cfg.combine
     if mode == "ensemble":
         return grads, mailbox, outer_mb
@@ -446,7 +449,9 @@ def _sync_core(comm: Comm, cfg: SyncConfig, grads, mailbox, epoch,
         # ... and deposit this epoch's *fresh local* grads for the successor.
         # Only mask-selected leaves ride the ring (§V-C): unmasked mailbox
         # slots keep their old (never-read) contents.
-        new_mailbox = _masked(mask, comm.recv_ring_inner(grads), mailbox)
+        if deposit is None:
+            deposit = comm.recv_ring_inner(grads)
+        new_mailbox = _masked(mask, deposit, mailbox)
     else:
         raise ValueError(f"unknown sync mode {mode!r}")
 
@@ -535,9 +540,12 @@ class StaticSchedule(SyncSchedule):
         return synced, {"mailbox": new_mb, "outer_mailbox": new_omb}
 
 
-# adaptive controller constants: EMA smoothing of the observed skew, and
-# the (implicit, unit) gain mapping smoothed excess skew to extra depth
+# adaptive controller constants: EMA smoothing of the observed skew, the
+# (implicit, unit) gain mapping smoothed excess skew to extra depth, and
+# the hysteresis deadband that keeps k_eff from flapping between adjacent
+# depths when the smoothed skew hovers at a rounding boundary
 ADAPT_ALPHA = 0.2
+ADAPT_DEADBAND = 0.25
 
 
 def adaptive_k_eff(skew_ema, k_max: int):
@@ -548,7 +556,8 @@ def adaptive_k_eff(skew_ema, k_max: int):
 
 
 def adaptive_controller_step(ctrl, observed_skew, k_max: int,
-                             alpha: float = ADAPT_ALPHA):
+                             alpha: float = ADAPT_ALPHA,
+                             deadband: float = ADAPT_DEADBAND):
     """One EMA update of the staleness controller (pure, jit-compatible).
 
     `observed_skew` is the deviation of the measured deposit age from the
@@ -556,9 +565,24 @@ def adaptive_controller_step(ctrl, observed_skew, k_max: int,
     are lagging (reads come out staler than planned — widen the window so
     they stop blocking), negative means the window is wider than the skew
     requires (narrow it back toward fresh reads).
+
+    Hysteresis (`deadband`): a raw `round(1 + ema)` flips k_eff every time
+    the EMA wobbles across a half-integer boundary — under noisy measured
+    skew (the free-running proc runtime's reality) that oscillation
+    re-gears the mailbox read depth every few epochs for no benefit.  The
+    controller therefore HOLDS the current depth unless the EMA-implied
+    depth `1 + ema` has moved more than `0.5 + deadband` away from it;
+    only then does it re-target `adaptive_k_eff(ema)`.  `deadband=0.0`
+    recovers the raw rounding controller.  Zero skew still pins k_eff at
+    1 (the EMA decays to 0 and 1 + 0 is inside every deadband around 1),
+    so the lock-step bitwise degeneration is untouched.
     """
     ema = (1.0 - alpha) * ctrl["skew_ema"] + alpha * observed_skew
-    return {"skew_ema": ema, "k_eff": adaptive_k_eff(ema, k_max)}
+    k_cur = jnp.clip(ctrl["k_eff"], 1, k_max).astype(jnp.int32)
+    implied = 1.0 + ema
+    move = jnp.abs(implied - k_cur.astype(jnp.float32)) > 0.5 + deadband
+    k_new = jnp.where(move, adaptive_k_eff(ema, k_max), k_cur)
+    return {"skew_ema": ema, "k_eff": k_new.astype(jnp.int32)}
 
 
 class AdaptiveSchedule(SyncSchedule):
@@ -646,12 +670,20 @@ class AdaptiveSchedule(SyncSchedule):
 
         # -- controller: EMA the observed deposit-age skew -------------------
         # lock-step SPMD runs observe zero skew (tags always equal
-        # epoch - k_eff); a free-running async runtime feeds real jitter in
-        # through the very same tags.  Unwritten slots (tag -1) are warmup:
-        # they read the zero payload and contribute zero skew.
+        # epoch - k_eff); a free-running async runtime (runtime/proccomm.py)
+        # feeds real jitter in through the very same tags.  Unwritten slots
+        # (tag -1) are warmup: they read the zero payload and contribute
+        # zero skew.  The signal is ONE-SIDED (clamped at 0): only producer
+        # LAG widens the window — a free-running consumer that trails its
+        # producer reads deposits tagged from its own future (negative age
+        # in local-epoch coordinates), and those fresher-than-planned reads
+        # cost nothing, so they must not cancel a lagging producer's skew
+        # in the pmean.  Lock-step runs observe exactly 0 either way, so
+        # the bitwise degeneration to depth-1 rma is untouched.
         observed = jnp.where(tag_read >= 0,
                              (epoch - tag_read - k_eff).astype(jnp.float32),
                              jnp.zeros_like(tag_read, jnp.float32))
+        observed = jnp.maximum(observed, 0.0)
         skew = comm.pmean_all(observed)          # uniform across ranks
         new_ctrl = adaptive_controller_step(
             {"skew_ema": ctrl["skew_ema"], "k_eff": ctrl["k_eff"]},
@@ -677,19 +709,27 @@ class AdaptiveSchedule(SyncSchedule):
         else:                         # no pod-boundary pipeline: no ships
             new_ctrl["shipped_for"] = shipped_for
 
-        # -- exchange on the fused flat payload (same core as static) -------
+        # -- deposit transfer: payload + producer epoch tag, ONE bundled ring
+        # hop.  The tag rides the same `recv_ring_inner` as the payload in a
+        # single pytree, so one-sided backends (ProcComm) deliver the pair
+        # atomically — a tag can never describe a different deposit than
+        # the payload it arrived with.  On the SPMD backends the bundle is
+        # the same leafwise transfer as two separate calls (bitwise equal).
+        tag_self = make_deposit_tag(epoch, comm.n_ranks if stacked else None)
         fg = {"w": spec.flatten(grads, stacked)}
+        bundle = comm.recv_ring_inner({"w": fg["w"], "tag": tag_self})
+        dep_tag = bundle["tag"]
+
+        # -- exchange on the fused flat payload (same core as static) -------
         fomb = {"w": sync_state["outer_mailbox"]} if cfg.overlap else None
         fsynced, fdeposit, fnew_omb = _sync_core(
             comm, cfg, fg, {"w": mb_flat}, epoch, {"w": True},
-            outer_mb=fomb, ship_due=ship_now)
+            outer_mb=fomb, ship_due=ship_now, deposit={"w": bundle["w"]})
         synced = spec.unflatten(fsynced["w"], grads, stacked)
         new_omb = fnew_omb["w"] if fnew_omb is not None \
             else sync_state["outer_mailbox"]
 
-        # -- deposit: fresh ring-shifted payload + the producer's epoch tag --
-        tag_self = make_deposit_tag(epoch, comm.n_ranks if stacked else None)
-        dep_tag = comm.recv_ring_inner(tag_self)
+        # -- deposit: slot e % k_max takes the bundled (payload, tag) pair --
         slot_w = jnp.mod(epoch, k_max)
         new_payload = jax.lax.dynamic_update_index_in_dim(
             payload, fdeposit["w"].astype(payload.dtype), slot_w, axis)

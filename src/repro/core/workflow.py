@@ -13,9 +13,13 @@ Per epoch, each rank (§IV-B):
   6. applies its Adam update (generator copies may drift — the ensemble
      response over ranks is the estimator, §VI-A).
 
-Two drivers share the per-rank functions:
+Three drivers share the per-rank functions:
   * `train_vmap`     — R simulated ranks on one device (convergence studies)
   * `make_epoch_fn_shard` — shard_map over a mesh (production / dry-run)
+  * `train_proc`     — N REAL worker processes free-running over the
+                       `repro.runtime` mailbox fabric (`ProcComm`); the
+                       only backend whose deposit tags carry measured
+                       (not simulated) skew
 
 Step 5 is owned by a `core.sync.SyncSchedule` (ISSUE 4): every sync-side
 buffer — the fused ring payload, the (depth-k or adaptive max-depth) RMA
@@ -113,6 +117,43 @@ def init_state(key, n_ranks: int, wcfg: WorkflowConfig, same_generator=True):
         for s in states[1:]:
             s["gen"] = states[0]["gen"]
     return jax.tree.map(lambda *xs: jnp.stack(xs), *states)
+
+
+def init_run(key, n_ranks: int, wcfg: WorkflowConfig, data, rank=None):
+    """Seed -> (initial state, bootstrap data split): THE derivation every
+    driver shares.  `train_vmap`, the shard driver's callers and the proc
+    workers (`runtime/launch.py`) must see bitwise-identical initial
+    states and per-rank data for the cross-backend parity pins to hold,
+    so the key-splitting order lives in exactly one place — change it
+    here or nowhere.
+
+    `rank=None` returns the stacked layout: (state `[R, ...]`,
+    data `[R, n_sub, obs]`).  An int returns (per-rank state, per-rank
+    data) for that rank only — bitwise equal to slicing the stacked
+    result, without paying the full R-rank build inside every worker
+    process (which would cost O(R) inits x O(R) workers job-wide).
+    """
+    key, k_sub = jax.random.split(key)
+    n_sub = max(1, int(wcfg.data_fraction * data.shape[0]))
+    sub_keys = jax.random.split(k_sub, n_ranks)
+
+    def split_for(k):
+        return jnp.take(
+            data, jax.random.permutation(k, data.shape[0])[:n_sub], axis=0)
+
+    if rank is None:
+        return init_state(key, n_ranks, wcfg), \
+            jnp.stack([split_for(k) for k in sub_keys])
+    keys = jax.random.split(key, n_ranks)
+    state = init_rank_state(keys[rank], wcfg)
+    if rank != 0:
+        # same_generator: every rank starts from rank 0's generator copy
+        # (init_rank_state splits its key (kg, kd, kr) and feeds kg to
+        # init_generator — reproduce exactly that for rank 0's key)
+        kg0 = jax.random.split(keys[0], 3)[0]
+        state["gen"] = gan.init_generator(
+            kg0, n_params=wcfg.problem_obj.n_params)
+    return state, split_for(sub_keys[rank])
 
 
 # ----------------------------------------------------------------------------
@@ -335,14 +376,9 @@ def train_vmap(key, wcfg: WorkflowConfig, n_outer: int, n_inner: int,
     up to scan-partition fusion noise.
     """
     R = n_outer * n_inner
-    key, k_sub = jax.random.split(key)
-    state = init_state(key, R, wcfg)
-    # each rank keeps a random sub-sample = data_fraction of the input (§VI-C2)
-    n_sub = max(1, int(wcfg.data_fraction * data.shape[0]))
-    sub_keys = jax.random.split(k_sub, R)
-    data_per_rank = jnp.stack([
-        jnp.take(data, jax.random.permutation(k, data.shape[0])[:n_sub], axis=0)
-        for k in sub_keys])
+    # each rank keeps a random sub-sample = data_fraction of the input
+    # (§VI-C2); the derivation is shared bitwise with the proc workers
+    state, data_per_rank = init_run(key, R, wcfg, data)
 
     if chunk <= 0:
         chunk = checkpoint_every if checkpoint_every > 0 else min(n_epochs, 64)
@@ -379,3 +415,34 @@ def train_vmap(key, wcfg: WorkflowConfig, n_outer: int, n_inner: int,
                                       "problem": wcfg.problem})
     history = jax.tree.map(lambda *xs: jnp.stack(xs), *hist) if hist else {}
     return state, history
+
+
+def train_proc(seed: int, wcfg: WorkflowConfig, n_outer: int, n_inner: int,
+               n_epochs: int, data, **kw):
+    """The third driver (ISSUE 5): N = n_outer*n_inner REAL worker
+    processes on this host, spawned via `jax.distributed.initialize`,
+    exchanging gradients through the `repro.runtime` mailbox fabric
+    (`ProcComm`) with the unchanged `SyncSchedule` layer on top.
+
+    `seed` replaces `train_vmap`'s key argument (workers rebuild
+    `PRNGKey(seed)` so the initial state and per-rank data split are
+    BITWISE the vmap driver's).  Keyword args pass through to
+    `runtime.launch.run_proc`: `lockstep` (default True — zero-jitter
+    lock-step runs reproduce the vmap trajectory bitwise), `jitter` (a
+    `runtime.JitterConfig` for reproducible asynchrony; implies
+    free-running), `ckpt_every`/`resume` (per-process checkpoints),
+    `run_dir`, `use_distributed`, `timeout`.
+
+    Returns (state, history) like `train_vmap`: `state` is the per-rank
+    final states stacked back into the `[R, ...]` layout, `history` maps
+    metric name -> `[n_epochs, R]` arrays (per-epoch, every epoch —
+    including the measured `skew_ema` / `k_eff` under the adaptive
+    schedule).  Use `runtime.launch.run_proc` directly when you need the
+    raw per-rank summaries (wall times, jitter config, distributed
+    status) as well.
+    """
+    from ..runtime.launch import run_proc
+    if kw.get("jitter") is not None and "lockstep" not in kw:
+        kw["lockstep"] = False         # jitter only bites when free-running
+    out = run_proc(wcfg, n_outer, n_inner, n_epochs, data, seed=seed, **kw)
+    return out["state"], out["history"]

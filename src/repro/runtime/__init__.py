@@ -1,0 +1,55 @@
+"""repro.runtime — the true multi-process asynchronous runtime (ISSUE 5).
+
+Everything below `core/` simulates the paper's one-sided semantics inside
+a single SPMD program (`VmapComm` rolls, `ShardComm` ppermutes) — useful
+for convergence studies and bitwise pinning, but lock-step by
+construction: the adaptive-staleness controller observes zero skew there
+and holds k_eff at 1 forever.  This package is the layer that turns the
+repo from an asynchrony *simulator* into the paper's actual workflow:
+N genuinely free-running worker processes whose RMA-mailbox deposit tags
+carry MEASURED jitter.
+
+Modules:
+
+    mailbox   mmap-backed cross-process one-sided windows: a seqlock'd
+              single-writer `Mailbox` per directed ring edge (lock-step
+              rendezvous or free-running overwrite), a depth-2 `Board`
+              per rank for the pmean bulletin, and a counter-file
+              `Barrier`
+    proccomm  `ProcComm` — the `Comm` surface (ring deposit/read,
+              `ship_outer`, `pmean_all`) over real cross-process
+              mailboxes; lock-step mode is bitwise-pinned against
+              `VmapComm`, free-running mode never blocks on a producer
+    jitter    `JitterConfig` — deterministic per-(seed, rank, epoch)
+              sleep injection so asynchrony is REPRODUCIBLE in tests and
+              benchmarks
+    launch    the multi-process launcher (`run_proc`) and the worker
+              entry point (`python -m repro.runtime.launch --worker`):
+              spawns N CPU processes via `jax.distributed.initialize`,
+              threads the unchanged `SyncSchedule` layer over `ProcComm`,
+              checkpoints per process, and aggregates results
+
+The drivers' third backend, `workflow.train_proc`, delegates here; see
+`docs/architecture.md` ("Runtime backends") for the data-flow diagram
+and `tests/test_runtime.py` for the lock-step parity and measured-skew
+pins.
+
+Exports resolve lazily (PEP 562): the worker entry point
+(`python -m repro.runtime.launch`) must reach
+`jax.distributed.initialize` before ANY jax computation runs, so this
+package must not drag the solver stack in at import time.
+"""
+__all__ = ["JitterConfig", "ProcComm", "run_proc"]
+
+
+def __getattr__(name):
+    if name == "JitterConfig":
+        from .jitter import JitterConfig
+        return JitterConfig
+    if name == "ProcComm":
+        from .proccomm import ProcComm
+        return ProcComm
+    if name == "run_proc":
+        from .launch import run_proc
+        return run_proc
+    raise AttributeError(name)

@@ -1,0 +1,300 @@
+"""mmap-backed cross-process one-sided windows for the proc runtime.
+
+Three primitives, all single-writer, built on shared-file `mmap` (the N
+worker processes live on one host — the launcher's contract):
+
+  * `Mailbox` — one directed ring edge (writer rank -> reader rank).
+    Two protocols over the same file:
+
+      lock-step   rendezvous by entry sequence number: the writer may not
+                  overwrite entry n-1 until the reader acknowledged it,
+                  the reader blocks until entry n is published.  Every
+                  rank executes the same comm-call sequence (the schedule
+                  layer's control flow is SPMD-uniform), so matching
+                  calls by a per-channel counter reproduces the SPMD
+                  backends' pairing exactly — this is the bitwise-parity
+                  mode.
+      free-run    a true one-sided window: the writer overwrites the slot
+                  under a seqlock (odd = in progress) and NEVER waits;
+                  the reader snapshots the latest consistent entry and
+                  NEVER blocks on the producer — `read()` returns None
+                  until the first deposit lands (the caller substitutes
+                  its warmup value).  This is the mode where deposit tags
+                  carry real measured jitter.
+
+  * `Board` — one rank's bulletin slot for `pmean_all`: depth-2
+    (seq-parity double buffer) so a reader one logical step behind still
+    finds its entry, plus one ack cell per reader rank so the lock-step
+    writer cannot lap a slow reader.
+
+  * `Barrier` — a counter-file barrier (arrive_and_wait) for run
+    start/end; deliberately file-based so it works before and after
+    `jax.distributed` is alive.
+
+Consistency model: CPython executes the mmap stores in program order and
+x86-TSO keeps them ordered across processes; the seqlock re-check on the
+read side catches the (rare) torn snapshot and retries.  Every spin loop
+carries a timeout so a crashed peer surfaces as `MailboxTimeout` instead
+of a hung test suite.
+
+File layout (`Mailbox`): u64 write_seq | u64 read_ack | i64 tag |
+u64 nbytes | payload.  Files appear atomically (temp + rename), so
+existence implies full size.
+"""
+from __future__ import annotations
+
+import os
+import struct
+import time
+from typing import Optional, Tuple
+
+_POLL_S = 2e-4
+
+# Mailbox header: write_seq, read_ack, tag, nbytes
+_MBX_HDR = struct.Struct("<QQqQ")
+# Board slot header: seqlock, logical_seq, tag
+_SLOT_HDR = struct.Struct("<QQq")
+_U64 = struct.Struct("<Q")
+
+
+class MailboxTimeout(RuntimeError):
+    """A peer process failed to make progress within the timeout."""
+
+
+def _wait(pred, timeout: float, what: str):
+    deadline = time.monotonic() + timeout
+    while not pred():
+        if time.monotonic() > deadline:
+            raise MailboxTimeout(f"timed out after {timeout:.0f}s "
+                                 f"waiting for {what}")
+        time.sleep(_POLL_S)
+
+
+def _create_file(path: str, size: int):
+    """Atomic appearance: write zeros to a temp file, rename into place."""
+    tmp = f"{path}.tmp.{os.getpid()}"
+    with open(tmp, "wb") as f:
+        f.write(b"\x00" * size)
+    os.rename(tmp, path)
+
+
+def _open_mmap(path: str, size: int, timeout: float):
+    import mmap
+    _wait(lambda: os.path.exists(path), timeout, f"file {path}")
+    f = open(path, "r+b")
+    return f, mmap.mmap(f.fileno(), size)
+
+
+class Mailbox:
+    """One directed edge; construct with `for_writer` / `for_reader`."""
+
+    def __init__(self, path: str, nbytes: int, timeout: float):
+        self.path, self.nbytes, self.timeout = path, nbytes, timeout
+        self._size = _MBX_HDR.size + nbytes
+        self._file = None
+        self._mm = None
+        self._seq = 0                   # entries written/read so far
+
+    # -- construction --------------------------------------------------------
+
+    @classmethod
+    def for_writer(cls, path: str, nbytes: int, timeout: float) -> "Mailbox":
+        mbx = cls(path, nbytes, timeout)
+        if not os.path.exists(path):
+            _create_file(path, mbx._size)
+        mbx._ensure_open()
+        return mbx
+
+    @classmethod
+    def for_reader(cls, path: str, nbytes: int, timeout: float) -> "Mailbox":
+        # lazily opened: in free-run mode the writer may not have created
+        # the file yet, and the reader must not block on it
+        return cls(path, nbytes, timeout)
+
+    def _ensure_open(self):
+        if self._mm is None:
+            self._file, self._mm = _open_mmap(self.path, self._size,
+                                              self.timeout)
+        return self._mm
+
+    # -- header accessors ----------------------------------------------------
+
+    def _get(self, off: int) -> int:
+        return _U64.unpack_from(self._mm, off)[0]
+
+    def _put(self, off: int, val: int):
+        _U64.pack_into(self._mm, off, val)
+
+    # -- write side ----------------------------------------------------------
+
+    def write(self, payload: bytes, tag: int, lockstep: bool):
+        assert len(payload) == self.nbytes, (len(payload), self.nbytes)
+        mm = self._ensure_open()
+        self._seq += 1
+        n = self._seq
+        if lockstep:
+            # rendezvous: entry n-1 must be consumed before we overwrite
+            _wait(lambda: self._get(8) >= n - 1, self.timeout,
+                  f"reader ack {n - 1} on {self.path}")
+            mm[_MBX_HDR.size:self._size] = payload
+            struct.pack_into("<q", mm, 16, tag)
+            self._put(24, self.nbytes)
+            self._put(0, n)             # publish AFTER the payload
+        else:
+            # seqlock overwrite, never waits: odd = write in progress
+            self._put(0, 2 * n - 1)
+            mm[_MBX_HDR.size:self._size] = payload
+            struct.pack_into("<q", mm, 16, tag)
+            self._put(24, self.nbytes)
+            self._put(0, 2 * n)
+
+    # -- read side -----------------------------------------------------------
+
+    def read(self, lockstep: bool) -> Optional[Tuple[bytes, int]]:
+        """Lock-step: block for the next entry in sequence.  Free-run:
+        latest consistent snapshot, or None before the first deposit."""
+        if lockstep:
+            self._ensure_open()
+            self._seq += 1
+            n = self._seq
+            _wait(lambda: self._get(0) >= n, self.timeout,
+                  f"entry {n} on {self.path}")
+            out = bytes(self._mm[_MBX_HDR.size:self._size])
+            tag = struct.unpack_from("<q", self._mm, 16)[0]
+            self._put(8, n)             # acknowledge: writer may overwrite
+            return out, tag
+        if self._mm is None and not os.path.exists(self.path):
+            return None                 # producer has never deposited
+        self._ensure_open()
+        deadline = time.monotonic() + self.timeout
+        while True:
+            s1 = self._get(0)
+            if s1 == 0:
+                return None             # file exists but nothing published
+            if s1 % 2 == 0:
+                out = bytes(self._mm[_MBX_HDR.size:self._size])
+                tag = struct.unpack_from("<q", self._mm, 16)[0]
+                if self._get(0) == s1:  # seqlock re-check: no torn read
+                    return out, tag
+            if time.monotonic() > deadline:
+                raise MailboxTimeout(f"seqlock never settled on {self.path}")
+            time.sleep(_POLL_S)
+
+
+class Board:
+    """One rank's depth-2 bulletin for `pmean_all` (single writer, many
+    readers).  Entries are (logical_seq, payload); readers in lock-step
+    mode fetch an exact logical_seq and ack it, free-run readers take the
+    freshest consistent entry."""
+
+    def __init__(self, path: str, nbytes: int, n_ranks: int, timeout: float):
+        self.path, self.nbytes, self.timeout = path, nbytes, timeout
+        self.n_ranks = n_ranks
+        self._stride = _SLOT_HDR.size + nbytes
+        self._acks_off = 2 * self._stride
+        self._size = self._acks_off + 8 * n_ranks
+        self._mm = None
+        self._file = None
+        self._seq = 0
+
+    @classmethod
+    def for_writer(cls, path, nbytes, n_ranks, timeout) -> "Board":
+        b = cls(path, nbytes, n_ranks, timeout)
+        if not os.path.exists(path):
+            _create_file(path, b._size)
+        b._ensure_open()
+        return b
+
+    @classmethod
+    def for_reader(cls, path, nbytes, n_ranks, timeout) -> "Board":
+        return cls(path, nbytes, n_ranks, timeout)
+
+    def _ensure_open(self):
+        if self._mm is None:
+            self._file, self._mm = _open_mmap(self.path, self._size,
+                                              self.timeout)
+        return self._mm
+
+    def _ack(self, reader_rank: int) -> int:
+        return _U64.unpack_from(self._mm, self._acks_off + 8 * reader_rank)[0]
+
+    def write(self, payload: bytes, readers, lockstep: bool):
+        """Publish entry n into slot n % 2.  Lock-step writers first wait
+        until every reader acked n-2 — with two slots live, nobody can be
+        lapped."""
+        assert len(payload) == self.nbytes
+        mm = self._ensure_open()
+        self._seq += 1
+        n = self._seq
+        if lockstep and n > 2:
+            _wait(lambda: all(self._ack(r) >= n - 2 for r in readers),
+                  self.timeout, f"board acks {n - 2} on {self.path}")
+        off = (n % 2) * self._stride
+        lock = _U64.unpack_from(mm, off)[0]
+        _U64.pack_into(mm, off, lock + 1)                   # odd: writing
+        mm[off + _SLOT_HDR.size:off + self._stride] = payload
+        struct.pack_into("<Q", mm, off + 8, n)
+        _U64.pack_into(mm, off, lock + 2)                   # even: published
+
+    def _snapshot(self, slot: int) -> Optional[Tuple[int, bytes]]:
+        off = slot * self._stride
+        s1 = _U64.unpack_from(self._mm, off)[0]
+        if s1 == 0 or s1 % 2 == 1:
+            return None
+        logical = struct.unpack_from("<Q", self._mm, off + 8)[0]
+        payload = bytes(self._mm[off + _SLOT_HDR.size:off + self._stride])
+        if _U64.unpack_from(self._mm, off)[0] != s1:
+            return None                                     # torn, retry
+        return logical, payload
+
+    def read(self, reader_rank: int, lockstep: bool) -> Optional[bytes]:
+        """Lock-step: block for logical entry n (the reader's own call
+        counter) and ack it.  Free-run: freshest consistent entry or None."""
+        if lockstep:
+            self._ensure_open()
+            self._seq += 1
+            n = self._seq
+            out = []
+
+            def ready():
+                snap = self._snapshot(n % 2)
+                if snap is not None and snap[0] == n:
+                    out.append(snap[1])
+                    return True
+                return False
+
+            _wait(ready, self.timeout, f"board entry {n} on {self.path}")
+            _U64.pack_into(self._mm, self._acks_off + 8 * reader_rank, n)
+            return out[0]
+        if self._mm is None and not os.path.exists(self.path):
+            return None
+        self._ensure_open()
+        best = None
+        for slot in (0, 1):
+            snap = self._snapshot(slot)
+            if snap is not None and (best is None or snap[0] > best[0]):
+                best = snap
+        return None if best is None else best[1]
+
+
+class Barrier:
+    """Counter-file barrier over the run directory: rank r bumps its cell,
+    then spins until every cell reached the round."""
+
+    def __init__(self, run_dir: str, rank: int, n_ranks: int,
+                 timeout: float = 600.0):
+        self.rank, self.n_ranks, self.timeout = rank, n_ranks, timeout
+        self.path = os.path.join(run_dir, "barrier.bin")
+        self._round = 0
+        if rank == 0 and not os.path.exists(self.path):
+            _create_file(self.path, 8 * n_ranks)
+        self._file, self._mm = _open_mmap(self.path, 8 * n_ranks, timeout)
+
+    def arrive_and_wait(self, what: str = "barrier"):
+        self._round += 1
+        n = self._round
+        _U64.pack_into(self._mm, 8 * self.rank, n)
+        _wait(lambda: all(
+            _U64.unpack_from(self._mm, 8 * r)[0] >= n
+            for r in range(self.n_ranks)), self.timeout,
+            f"{what} (round {n})")

@@ -1,0 +1,222 @@
+"""`ProcComm` — the `Comm` surface over real cross-process mailboxes.
+
+The third communication backend (after `VmapComm` and `ShardComm`), and
+the first one that is NOT a lock-step SPMD emulation: each worker process
+of `runtime/launch.py` owns one `ProcComm` and runs the unchanged
+`SyncSchedule` layer EAGERLY against it — every `recv_ring_*` /
+`ship_outer` / `pmean_all` call moves bytes through the mmap windows of
+`runtime/mailbox.py` instead of lowering to a collective.
+
+Two modes, fixed per run:
+
+  lock-step (`lockstep=True`, the default) — every transfer is matched to
+      its peer by a per-channel call counter and rendezvoused, so the run
+      is a faithful re-execution of the SPMD pairing: a zero-jitter
+      lock-step run is BITWISE identical to the `VmapComm` trajectory
+      (pinned by `tests/test_runtime.py`).
+  free-running (`lockstep=False`) — deposits overwrite one-sided windows
+      and reads take the latest consistent snapshot without ever blocking
+      on the producer: ranks genuinely drift apart, and the epoch tags
+      bundled into the deposits carry the MEASURED skew that the adaptive
+      controller feeds on.  A read before the first deposit returns the
+      warmup value (zeros for float leaves, -1 for integer leaves — the
+      mailbox tag convention).
+
+Rank layout matches `VmapComm`: global rank = outer * n_inner + inner
+(row-major), ring direction per Algorithm 1 (rank i receives from i-1).
+`recv_hypercube` (the dbtree mode) is deliberately unsupported — a
+log2(R)-stage barrier tree has no free-running reading, which is the
+whole point of this backend.
+
+`cond_ship` overrides the base class's `lax.cond` gate with a plain
+Python branch: mailbox I/O cannot be traced through `lax.cond`'s
+abstract evaluation of both branches.
+"""
+from __future__ import annotations
+
+import os
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.ring import Comm
+from .mailbox import Board, Mailbox
+
+DEFAULT_TIMEOUT_S = 180.0
+
+
+def tree_to_bytes(tree) -> bytes:
+    """Concatenate the leaves (tree-flatten order) as raw little-endian
+    bytes — the wire format of every mailbox payload."""
+    return b"".join(np.ascontiguousarray(jax.device_get(leaf)).tobytes()
+                    for leaf in jax.tree.leaves(tree))
+
+
+def bytes_to_tree(buf: bytes, like):
+    """Inverse of `tree_to_bytes` against `like`'s structure/shapes/dtypes."""
+    leaves, treedef = jax.tree.flatten(like)
+    out, off = [], 0
+    for leaf in leaves:
+        arr = np.asarray(leaf)
+        n = arr.nbytes
+        out.append(jnp.asarray(
+            np.frombuffer(buf, dtype=arr.dtype, count=arr.size,
+                          offset=off).reshape(arr.shape)))
+        off += n
+    assert off == len(buf), (off, len(buf))
+    return jax.tree.unflatten(treedef, out)
+
+
+def warmup_like(like):
+    """The never-deposited value: zeros for float leaves, -1 for integer
+    leaves (the mailbox tag convention — a -1 tag marks warmup reads,
+    which the adaptive controller excludes from the skew signal)."""
+    return jax.tree.map(
+        lambda x: jnp.full(x.shape, -1, x.dtype)
+        if jnp.issubdtype(jnp.asarray(x).dtype, jnp.integer)
+        else jnp.zeros_like(x), like)
+
+
+class ProcComm(Comm):
+    """One worker process's view of the ring; see the module docstring."""
+
+    def __init__(self, n_outer: int, n_inner: int, rank: int, run_dir: str,
+                 lockstep: bool = True,
+                 timeout: float = DEFAULT_TIMEOUT_S):
+        self.n_outer, self.n_inner = n_outer, n_inner
+        self.rank, self.run_dir = rank, run_dir
+        self.lockstep, self.timeout = lockstep, timeout
+        self._epoch = 0
+        self._out = {}                 # channel -> Mailbox (to successor)
+        self._in = {}                  # channel -> Mailbox (from predecessor)
+        self._board: Optional[Board] = None
+        self._peer_boards = {}
+
+    # -- ring neighbours (receive FROM predecessor, deposit TO successor) ----
+
+    def _o(self):
+        return self.rank // self.n_inner
+
+    def _j(self):
+        return self.rank % self.n_inner
+
+    def _peers(self, channel: str):
+        o, j, O, I = self._o(), self._j(), self.n_outer, self.n_inner
+        if channel == "inner":
+            return (o * I + (j + 1) % I,          # successor (my reader)
+                    o * I + (j - 1) % I)          # predecessor (my writer)
+        if channel in ("outer", "ship"):
+            return (((o + 1) % O) * I + j,
+                    ((o - 1) % O) * I + j)
+        if channel == "all":
+            R = self.n_ranks
+            return ((self.rank + 1) % R, (self.rank - 1) % R)
+        raise ValueError(channel)
+
+    def _mbx_path(self, src: int, dst: int, channel: str) -> str:
+        return os.path.join(self.run_dir, f"mbx_{src}to{dst}_{channel}.bin")
+
+    # -- the transfer core ---------------------------------------------------
+
+    def begin_epoch(self, epoch: int):
+        """Stamp the local free-running epoch counter onto subsequent
+        deposits (diagnostic tag at the mailbox level; the schedule-level
+        tag rides inside the payload itself)."""
+        self._epoch = int(epoch)
+
+    def _transfer(self, channel: str, tree):
+        """Deposit `tree` toward my successor, return the predecessor's
+        deposit (lock-step: the matching entry; free-run: the latest)."""
+        succ, pred = self._peers(channel)
+        payload = tree_to_bytes(tree)
+        out = self._out.get(channel)
+        if out is None:
+            out = self._out[channel] = Mailbox.for_writer(
+                self._mbx_path(self.rank, succ, channel), len(payload),
+                self.timeout)
+        out.write(payload, self._epoch, self.lockstep)
+        inc = self._in.get(channel)
+        if inc is None:
+            inc = self._in[channel] = Mailbox.for_reader(
+                self._mbx_path(pred, self.rank, channel), len(payload),
+                self.timeout)
+        got = inc.read(self.lockstep)
+        if got is None:                # free-run, producer not started yet
+            return warmup_like(tree)
+        return bytes_to_tree(got[0], tree)
+
+    # -- Comm surface --------------------------------------------------------
+
+    def recv_ring_all(self, tree):
+        if self.n_ranks == 1:
+            return tree
+        return self._transfer("all", tree)
+
+    def recv_ring_inner(self, tree):
+        if self.n_inner == 1:          # size-1 group: identity, as VmapComm
+            return tree
+        return self._transfer("inner", tree)
+
+    def recv_ring_outer(self, tree):
+        if self.n_outer == 1:
+            return tree
+        return self._transfer("outer", tree)
+
+    def ship_outer(self, tree):
+        # a distinct channel: in the overlap schedule the ship's consumer
+        # is NEXT epoch's mailbox read, and its call cadence (the ship
+        # gate) differs from recv_ring_outer's every-epoch cadence
+        if self.n_outer == 1:
+            return tree
+        return self._transfer("ship", tree)
+
+    def cond_ship(self, ship_due, tree, fallback):
+        # Python branch instead of lax.cond: mailbox I/O cannot be traced.
+        # In lock-step mode the predicate is identical on every rank (it
+        # derives from the epoch and the pmean'd controller), so the call
+        # counters stay matched.
+        if bool(ship_due):
+            return self.ship_outer(tree)
+        return fallback
+
+    def pmean_all(self, tree):
+        if self.n_ranks == 1:
+            return tree
+        payload = tree_to_bytes(tree)
+        if self._board is None:
+            self._board = Board.for_writer(
+                os.path.join(self.run_dir, f"board_{self.rank}.bin"),
+                len(payload), self.n_ranks, self.timeout)
+            self._readers = [r for r in range(self.n_ranks)
+                             if r != self.rank]
+        self._board.write(payload, self._readers, self.lockstep)
+        vals = []
+        for r in range(self.n_ranks):  # rank order: deterministic reduce
+            if r == self.rank:
+                vals.append(tree)
+                continue
+            b = self._peer_boards.get(r)
+            if b is None:
+                b = self._peer_boards[r] = Board.for_reader(
+                    os.path.join(self.run_dir, f"board_{r}.bin"),
+                    len(payload), self.n_ranks, self.timeout)
+            got = b.read(self.rank, self.lockstep)
+            if got is not None:        # free-run: a silent peer just drops
+                vals.append(bytes_to_tree(got, tree))
+        # mirror VmapComm.pmean_all: stack on a leading axis, mean over it
+        stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *vals)
+        return jax.tree.map(lambda x: x.mean(axis=0), stacked)
+
+    def recv_hypercube(self, tree, stage: int):
+        raise NotImplementedError(
+            "mode='dbtree' is a lock-step log2(R)-stage barrier tree and "
+            "is not supported on the proc backend — use the vmap/shard "
+            "simulators for dbtree studies")
+
+    def inner_index(self, like=None):
+        return jnp.asarray(self._j(), jnp.int32)
+
+    def mask_where(self, cond_scalar, a, b):
+        return jax.tree.map(lambda x, y: jnp.where(cond_scalar, x, y), a, b)

@@ -189,6 +189,62 @@ def test_adaptive_k_eff_is_integer_clip():
 
 
 # ----------------------------------------------------------------------------
+# hysteresis deadband (ISSUE 5 satellite): no flapping between adjacent depths
+
+
+def _run_controller(skews, k_max, deadband):
+    ctrl = {"skew_ema": jnp.zeros(()), "k_eff": jnp.ones((), jnp.int32)}
+    ks = []
+    for s in skews:
+        ctrl = adaptive_controller_step(ctrl, jnp.asarray(s, jnp.float32),
+                                        k_max, deadband=deadband)
+        ks.append(int(ctrl["k_eff"]))
+    return ks
+
+
+def _transitions(ks):
+    return sum(a != b for a, b in zip(ks, ks[1:]))
+
+
+def test_deadband_suppresses_boundary_oscillation():
+    """The motivating failure: skew alternating 0.7/0.3 drives the EMA
+    across the 0.5 rounding boundary every step, so the raw controller
+    (deadband=0) re-gears k_eff between 1 and 2 indefinitely; the
+    deadband controller holds depth 1 throughout — the implied depth
+    never strays far enough from the current one to justify a move."""
+    skews = [0.7 if i % 2 == 0 else 0.3 for i in range(60)]
+    raw = _run_controller(skews, k_max=4, deadband=0.0)
+    held = _run_controller(skews, k_max=4, deadband=0.25)
+    assert _transitions(raw[20:]) > 10       # flaps at steady state
+    assert _transitions(held) == 0 and set(held) == {1}
+
+
+def test_deadband_still_tracks_large_skew_moves():
+    """Hysteresis must not cost responsiveness: sustained large skew still
+    widens to k_max and sustained zero skew still narrows back to 1
+    (the zero-skew pin that keeps lock-step runs bitwise)."""
+    ks = _run_controller([5.0] * 40 + [0.0] * 60, k_max=4, deadband=0.25)
+    assert ks[39] == 4 and ks[:40] == sorted(ks[:40])
+    assert ks[-1] == 1
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.integers(1, 6),
+       st.lists(st.floats(-10.0, 10.0), min_size=2, max_size=60))
+def test_deadband_never_increases_transitions(k_max, skews):
+    """Property (hypothesis shim): on ANY skew sequence the deadband
+    controller (a) never leaves [1, k_max] and (b) counted from the
+    shared initial depth 1, changes depth at most as often as the raw
+    rounding controller — every deadband move lands on the raw
+    controller's own value (`adaptive_k_eff(ema)`), so between two
+    deadband moves the raw trajectory must itself have changed."""
+    raw = _run_controller(skews, k_max, deadband=0.0)
+    held = _run_controller(skews, k_max, deadband=0.25)
+    assert all(1 <= k <= k_max for k in held)
+    assert _transitions([1] + held) <= _transitions([1] + raw)
+
+
+# ----------------------------------------------------------------------------
 # adaptive staleness semantics: reads exactly k_eff old, tagged deposits
 
 

@@ -78,6 +78,81 @@ def test_checkpoint_roundtrip_bf16_and_latest():
                                           np.asarray(b, np.float32))
 
 
+# ----------------------------------------------------------------------------
+# crash-resilient restore (ISSUE 5 satellite): a worker process killed
+# mid-save leaves a truncated newest checkpoint — resume must fall back
+
+
+def _tree(v):
+    return {"w": jnp.full((4, 3), float(v), jnp.float32),
+            "step": jnp.asarray(v, jnp.int32)}
+
+
+def _truncate(path, keep=40):
+    with open(path, "rb") as f:
+        head = f.read(keep)
+    with open(path, "wb") as f:
+        f.write(head)
+
+
+@pytest.mark.parametrize("wreck", ["truncate_npz", "missing_npz",
+                                   "corrupt_meta"])
+def test_restore_latest_falls_back_past_corrupt_newest(wreck):
+    from repro.checkpoint import list_steps, restore_latest
+    with tempfile.TemporaryDirectory() as d:
+        save_checkpoint(d, 2, _tree(2))
+        save_checkpoint(d, 4, _tree(4))
+        step4 = os.path.join(d, "step_00000004")
+        if wreck == "truncate_npz":      # killed mid-write: partial zip
+            _truncate(os.path.join(step4, "arrays.npz"))
+        elif wreck == "missing_npz":     # killed before the array dump
+            os.remove(os.path.join(step4, "arrays.npz"))
+        else:                            # killed mid-json
+            _truncate(os.path.join(step4, "meta.json"), keep=10)
+        assert list_steps(d) == [2, 4]   # the wreck still LOOKS newest
+        with pytest.warns(UserWarning, match="step_4.*falling back"):
+            tree, step = restore_latest(d, _tree(0))
+        assert step == 2                 # fell back to the previous save
+        for a, b in zip(jax.tree.leaves(_tree(2)), jax.tree.leaves(tree)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_restore_latest_none_when_every_step_is_corrupt():
+    from repro.checkpoint import restore_latest
+    with tempfile.TemporaryDirectory() as d:
+        save_checkpoint(d, 3, _tree(3))
+        _truncate(os.path.join(d, "step_00000003", "arrays.npz"))
+        with pytest.warns(UserWarning):
+            tree, step = restore_latest(d, _tree(0))
+        assert tree is None and step is None
+
+
+def test_restore_latest_raises_on_structural_mismatch():
+    """A like_tree that no longer matches the saved keys is a CALLER bug
+    (changed model/config), not crash damage — it must raise loudly
+    instead of being skipped as corruption (which would silently restart
+    training from scratch)."""
+    from repro.checkpoint import restore_latest
+    with tempfile.TemporaryDirectory() as d:
+        save_checkpoint(d, 2, _tree(2))
+        different = {"w": jnp.zeros((4, 3)), "extra": jnp.zeros(())}
+        with pytest.raises(KeyError, match="missing keys"):
+            restore_latest(d, different)
+
+
+def test_restore_latest_max_step_caps_the_search():
+    """The proc launcher's resume negotiation: every rank must restart
+    from the same epoch, so the search is capped at the newest step
+    loadable by ALL ranks."""
+    from repro.checkpoint import restore_latest
+    with tempfile.TemporaryDirectory() as d:
+        save_checkpoint(d, 2, _tree(2))
+        save_checkpoint(d, 4, _tree(4))
+        tree, step = restore_latest(d, _tree(0), max_step=2)
+        assert step == 2
+        assert int(tree["step"]) == 2
+
+
 def test_checkpoint_missing_key_raises():
     tree = {"a": jnp.ones((2,))}
     bigger = {"a": jnp.ones((2,)), "b": jnp.ones((2,))}
