@@ -15,6 +15,13 @@
 #                                    # proc backend (mailbox fabric units +
 #                                    # 2-process jax.distributed parity and
 #                                    # measured-skew integration tests)
+#   scripts/check.sh --analysis      # analysis lane: repo-invariant AST
+#                                    # linter (scripts/repro_lint.py) +
+#                                    # bounded protocol model check of the
+#                                    # mailbox fabric (tests/test_analysis.py)
+#                                    # — seconds, not minutes; also runs
+#                                    # inside the default full gate via
+#                                    # tests/test_analysis.py
 #   scripts/check.sh --docs          # docs lane: dead links, stale file
 #                                    # references, package docstrings
 #                                    # (scripts/docs_lint.py)
@@ -37,6 +44,12 @@ if [[ "${1:-}" == "--runtime" ]]; then
     shift
     exec env PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
         python -m pytest -x -q tests/test_runtime.py "$@"
+fi
+if [[ "${1:-}" == "--analysis" ]]; then
+    shift
+    python scripts/repro_lint.py
+    exec env PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
+        python -m pytest -x -q tests/test_analysis.py "$@"
 fi
 if [[ "${1:-}" == "--docs" ]]; then
     shift

@@ -1,0 +1,366 @@
+#!/usr/bin/env python3
+"""Repo-invariant AST linter — the static half of `scripts/check.sh
+--analysis` (the other half is the `repro.analysis` protocol model
+checker).  Keeps the repo's hard-won JAX discipline from regressing as
+backends multiply; all checks are offline, dependency-free `ast` walks
+over `src/repro`.
+
+  1. Comm-surface conformance — every backend subclassing
+     `core/ring.py`'s `Comm` (`VmapComm`, `ShardComm`, `ProcComm`, the
+     coming TCP backend) must implement every abstract surface method,
+     and every override's parameter names must match the base
+     declaration (a backend may REFINE a name by suffixing, e.g. `cond`
+     -> `cond_per_rank`, documenting its layout without drifting the
+     surface).
+  2. Donation discipline — a callable built by `jax.jit(...,
+     donate_argnums=...)` (directly or through a module-local factory
+     that returns one) invalidates the donated argument's buffer; the
+     linter flags any read of that variable after the donating call
+     without an intervening rebind.
+  3. Host-call hygiene — no `print`, `time.*`, `np.random.*`,
+     `random.*`, or `os.*` (except `os.environ` reads, which are
+     trace-time constants) inside function bodies of the traced-core
+     modules; such calls silently bake into or break a jitted trace.
+  4. SPMD-uniform control flow — no Python `if`/`while`/ternary whose
+     test calls into `jnp.*`/`jax.*` in the traced-core modules: a
+     branch on a traced value either fails at trace time or silently
+     specializes; use `jnp.where` / `lax.cond`.
+  5. Struct-offset consistency — `runtime/mailbox.py` may not pass
+     hand-written integer offsets to `pack_into`/`unpack_from`/
+     `_get`/`_put`; every header offset must be the derived
+     `_MBX_OFF_*`/`_SLOT_OFF_*` constants (from `field_offsets`) so the
+     file layout has one source of truth.
+
+Exit status is the number of problems found (0 == clean), matching
+`scripts/docs_lint.py` so the lanes compose.
+"""
+from __future__ import annotations
+
+import ast
+import os
+import sys
+from typing import Dict, List, Optional, Tuple
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+SRC_PKG = os.path.join(ROOT, "src", "repro")
+
+COMM_DEF = "core/ring.py"
+MAILBOX = "runtime/mailbox.py"
+
+# modules whose function bodies run under jit/vmap/shard_map tracing
+TRACED_CORE = [
+    "core/sync.py", "core/ring.py", "core/gan.py", "core/ensemble.py",
+    "core/residuals.py", "core/pipeline.py",
+    "kernels/ops.py", "kernels/inverse_cdf.py", "kernels/ref.py",
+    "kernels/flash_attention.py", "kernels/ssd_scan.py",
+]
+
+
+def _chain(node) -> Optional[Tuple[str, List[str]]]:
+    """Attribute chain -> (root name, [attr, ...]), e.g. np.random.normal
+    -> ("np", ["random", "normal"]); None for non-Name roots."""
+    attrs: List[str] = []
+    while isinstance(node, ast.Attribute):
+        attrs.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        return node.id, attrs[::-1]
+    return None
+
+
+def _arg_names(fn) -> List[str]:
+    args = [a.arg for a in fn.args.posonlyargs + fn.args.args]
+    return args[1:] if args and args[0] == "self" else args
+
+
+def _is_abstract(fn) -> bool:
+    body = fn.body
+    if body and isinstance(body[0], ast.Expr) \
+            and isinstance(body[0].value, ast.Constant) \
+            and isinstance(body[0].value.value, str):
+        body = body[1:]
+    return (len(body) == 1 and isinstance(body[0], ast.Raise)
+            and "NotImplementedError" in ast.dump(body[0]))
+
+
+# ---------------------------------------------------------------------------
+# 1. Comm-surface conformance
+
+
+def check_comm_surface(trees: Dict[str, ast.AST], problems: List[str]):
+    base = None
+    for cls in ast.walk(trees.get(COMM_DEF) or ast.parse("")):
+        if isinstance(cls, ast.ClassDef) and cls.name == "Comm":
+            base = cls
+    if base is None:
+        problems.append(f"{COMM_DEF}: base class Comm not found")
+        return
+    surface = {}        # name -> (args, abstract)
+    for fn in base.body:
+        if isinstance(fn, ast.FunctionDef) and not fn.decorator_list \
+                and not fn.name.startswith("_"):
+            surface[fn.name] = (_arg_names(fn), _is_abstract(fn))
+    for rel, tree in trees.items():
+        for cls in ast.walk(tree):
+            if not (isinstance(cls, ast.ClassDef) and cls.name != "Comm"
+                    and any((c := _chain(b)) is not None
+                            and (c[0], c[1][-1:]) in
+                            (("Comm", []), (c[0], ["Comm"]))
+                            for b in cls.bases)):
+                continue
+            own = {fn.name: fn for fn in cls.body
+                   if isinstance(fn, ast.FunctionDef)}
+            for name, (bargs, abstract) in surface.items():
+                if name not in own:
+                    if abstract:
+                        problems.append(
+                            f"{rel}: {cls.name} does not implement "
+                            f"Comm.{name} (abstract surface method)")
+                    continue
+                sargs = _arg_names(own[name])
+                ok = len(sargs) == len(bargs) and all(
+                    s == b or s.startswith(b + "_")
+                    for s, b in zip(sargs, bargs))
+                if not ok:
+                    problems.append(
+                        f"{rel}: {cls.name}.{name}({', '.join(sargs)}) "
+                        f"drifts from Comm.{name}({', '.join(bargs)}) — "
+                        f"names must match or refine by suffix")
+
+
+# ---------------------------------------------------------------------------
+# 2. Donation discipline
+
+
+def _donate_indices(node) -> Optional[Tuple[int, ...]]:
+    """donate indices of a jax.jit(..., donate_argnums=...) call."""
+    if not isinstance(node, ast.Call):
+        return None
+    c = _chain(node.func)
+    if c != ("jax", ["jit"]):
+        return None
+    for kw in node.keywords:
+        if kw.arg == "donate_argnums":
+            v = kw.value
+            if isinstance(v, ast.Constant) and isinstance(v.value, int):
+                return (v.value,)
+            if isinstance(v, (ast.Tuple, ast.List)) and all(
+                    isinstance(e, ast.Constant) for e in v.elts):
+                return tuple(e.value for e in v.elts)
+            return None
+    return None
+
+
+def _stmts_in_order(fn) -> List[ast.stmt]:
+    """Statements of fn in source order, not descending into nested
+    function/class definitions (their bodies run at another time)."""
+    out: List[ast.stmt] = []
+
+    def rec(body):
+        for st in body:
+            out.append(st)
+            if isinstance(st, (ast.FunctionDef, ast.AsyncFunctionDef,
+                               ast.ClassDef, ast.Lambda)):
+                continue
+            for field in ("body", "orelse", "finalbody", "handlers"):
+                sub = getattr(st, field, None)
+                if sub:
+                    rec([h for h in sub] if field != "handlers"
+                        else [s for h in sub for s in h.body])
+    rec(fn.body)
+    return out
+
+
+def _names(node, ctx) -> set:
+    return {n.id for n in ast.walk(node)
+            if isinstance(n, ast.Name) and isinstance(n.ctx, ctx)}
+
+
+def check_donation(rel: str, tree: ast.AST, problems: List[str]):
+    factories: Dict[str, Tuple[Tuple[int, ...], Optional[int]]] = {}
+    for fn in ast.walk(tree):
+        if not isinstance(fn, ast.FunctionDef):
+            continue
+        for st in ast.walk(fn):
+            if not isinstance(st, ast.Return) or st.value is None:
+                continue
+            cands = list(enumerate(st.value.elts)) \
+                if isinstance(st.value, ast.Tuple) else [(None, st.value)]
+            for pos, v in cands:
+                idx = _donate_indices(v)
+                if idx is not None:
+                    factories[fn.name] = (idx, pos)
+    for fn in ast.walk(tree):
+        if not isinstance(fn, ast.FunctionDef):
+            continue
+        stmts = _stmts_in_order(fn)
+        donated: Dict[str, Tuple[int, ...]] = {}
+        for i, st in enumerate(stmts):
+            if isinstance(st, ast.Assign) and isinstance(st.value, ast.Call):
+                idx = _donate_indices(st.value)
+                pos = None
+                if idx is None and isinstance(st.value.func, ast.Name) \
+                        and st.value.func.id in factories:
+                    idx, pos = factories[st.value.func.id]
+                if idx is not None and len(st.targets) == 1:
+                    tgt = st.targets[0]
+                    if pos is not None and isinstance(tgt, ast.Tuple) \
+                            and pos < len(tgt.elts) \
+                            and isinstance(tgt.elts[pos], ast.Name):
+                        donated[tgt.elts[pos].id] = idx
+                    elif pos is None and isinstance(tgt, ast.Name):
+                        donated[tgt.id] = idx
+            for call in ast.walk(st):
+                if not (isinstance(call, ast.Call)
+                        and isinstance(call.func, ast.Name)
+                        and call.func.id in donated):
+                    continue
+                for k in donated[call.func.id]:
+                    if k >= len(call.args) or \
+                            not isinstance(call.args[k], ast.Name):
+                        continue
+                    v = call.args[k].id
+                    rebound = isinstance(st, ast.Assign) and \
+                        v in _names(ast.Module(body=[
+                            ast.Expr(value=t) for t in st.targets],
+                            type_ignores=[]), ast.Store)
+                    if rebound:
+                        continue
+                    for st2 in stmts[i + 1:]:
+                        if v in _names(st2, ast.Load):
+                            problems.append(
+                                f"{rel}:{st2.lineno}: donated buffer "
+                                f"`{v}` (arg {k} of "
+                                f"{call.func.id}(), line {st.lineno}) "
+                                f"is read after donation")
+                            break
+                        if v in _names(st2, ast.Store):
+                            break
+
+
+# ---------------------------------------------------------------------------
+# 3. Host-call hygiene in traced-core modules
+
+
+def check_host_calls(rel: str, tree: ast.AST, problems: List[str]):
+    for fn in ast.walk(tree):
+        if not isinstance(fn, ast.FunctionDef):
+            continue
+        for call in ast.walk(fn):
+            if not isinstance(call, ast.Call):
+                continue
+            if isinstance(call.func, ast.Name) and call.func.id == "print":
+                problems.append(f"{rel}:{call.lineno}: print() inside "
+                                f"traced-core module")
+                continue
+            c = _chain(call.func)
+            if c is None:
+                continue
+            root, attrs = c
+            bad = None
+            if root == "time":
+                bad = "time." + ".".join(attrs)
+            elif root in ("np", "numpy") and attrs[:1] == ["random"]:
+                bad = f"{root}.{'.'.join(attrs)}"
+            elif root == "random":
+                bad = "random." + ".".join(attrs)
+            elif root == "os" and attrs[:1] != ["environ"]:
+                bad = "os." + ".".join(attrs)
+            if bad:
+                problems.append(
+                    f"{rel}:{call.lineno}: host-side call {bad}() inside "
+                    f"traced-core module (bakes into / breaks the trace)")
+
+
+# ---------------------------------------------------------------------------
+# 4. SPMD-uniform control flow
+
+
+def check_traced_branch(rel: str, tree: ast.AST, problems: List[str]):
+    for node in ast.walk(tree):
+        if not isinstance(node, (ast.If, ast.While, ast.IfExp)):
+            continue
+        for call in ast.walk(node.test):
+            if not isinstance(call, ast.Call):
+                continue
+            c = _chain(call.func)
+            if c and c[0] in ("jnp", "jax"):
+                problems.append(
+                    f"{rel}:{node.lineno}: Python branch on traced value "
+                    f"({c[0]}.{'.'.join(c[1])}(...) in the test) — use "
+                    f"jnp.where / lax.cond")
+
+
+# ---------------------------------------------------------------------------
+# 5. Derived struct offsets in runtime/mailbox.py
+
+
+def check_struct_offsets(rel: str, tree: ast.AST, problems: List[str]):
+    for call in ast.walk(tree):
+        if not isinstance(call, ast.Call) \
+                or not isinstance(call.func, ast.Attribute):
+            continue
+        attr = call.func.attr
+        if attr in ("pack_into", "unpack_from"):
+            # struct.pack_into(fmt, buf, off, ...) vs S.pack_into(buf, off)
+            off_idx = 2 if (isinstance(call.func.value, ast.Name)
+                            and call.func.value.id == "struct") else 1
+        elif attr in ("_get", "_put"):
+            off_idx = 0
+        else:
+            continue
+        if off_idx < len(call.args):
+            off = call.args[off_idx]
+            if isinstance(off, ast.Constant) and isinstance(off.value, int):
+                problems.append(
+                    f"{rel}:{call.lineno}: hand-written struct offset "
+                    f"{off.value} in {attr}() — derive it from "
+                    f"_MBX_HDR/_SLOT_HDR via field_offsets()")
+
+
+# ---------------------------------------------------------------------------
+
+
+def lint_sources(sources: Dict[str, str]) -> List[str]:
+    """Run every check over {repo-relative-module: source}; returns the
+    problem list.  Pure — tests feed synthetic sources through this."""
+    problems: List[str] = []
+    trees: Dict[str, ast.AST] = {}
+    for rel, text in sources.items():
+        try:
+            trees[rel] = ast.parse(text)
+        except SyntaxError as e:
+            problems.append(f"{rel}: unparseable ({e})")
+    check_comm_surface(trees, problems)
+    for rel, tree in trees.items():
+        check_donation(rel, tree, problems)
+        if rel in TRACED_CORE:
+            check_host_calls(rel, tree, problems)
+            check_traced_branch(rel, tree, problems)
+        if rel == MAILBOX:
+            check_struct_offsets(rel, tree, problems)
+    return problems
+
+
+def repo_sources() -> Dict[str, str]:
+    out = {}
+    for dirpath, _dirnames, filenames in os.walk(SRC_PKG):
+        for f in sorted(filenames):
+            if f.endswith(".py"):
+                p = os.path.join(dirpath, f)
+                rel = os.path.relpath(p, SRC_PKG).replace(os.sep, "/")
+                out[rel] = open(p).read()
+    return out
+
+
+def main() -> int:
+    sources = repo_sources()
+    problems = lint_sources(sources)
+    for p in problems:
+        print(f"repro-lint: {p}")
+    print(f"repro-lint: {len(sources)} modules, {len(problems)} problem(s)")
+    return min(len(problems), 99)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,39 @@
+"""Static-analysis lane for the async fabric (ISSUE 6).
+
+Machine-checked statements of the invariants the rest of the stack
+assumes about `runtime/mailbox.py`, established BEFORE a second (e.g.
+cross-host TCP) backend re-implements the same protocols:
+
+  * `explorer` — an exhaustive DFS interleaving explorer over
+    small-model protocol abstractions: every schedule of atomic
+    load/store steps is visited (bounded entries/ranks), reporting
+    invariant violations with their adversarial schedule, guard
+    deadlocks, and completion reachability.
+  * `model` — the `Mailbox` (lock-step rendezvous + free-run seqlock),
+    `Board` (depth-2 double buffer + acks) and `Barrier` protocols as
+    explicit step sequences, each step cross-linked to the concrete
+    `runtime/mailbox.py` line it models; the two ISSUE 6 crash-recovery
+    bugs are re-introducible as knobs so the checker's teeth stay
+    pinned by tests.
+  * `faults` — a fault-injection harness that drives the REAL mmap code
+    through the adversarial interleavings the explorer finds, via the
+    `mailbox.set_hook` trace points at publish/ack/snapshot boundaries.
+
+The companion repo-invariant AST linter lives in `scripts/repro_lint.py`
+(Comm-surface conformance, donation discipline, host-call and traced-
+branching hygiene, derived struct offsets); `scripts/check.sh --analysis`
+runs both in seconds, and `tests/test_analysis.py` wires the lane into
+the default tier-1 gate.
+"""
+from .explorer import InvariantViolation, Process, Result, Step, explore
+from .faults import Gate, InterleavingDriver
+from .model import (ANCHORS, barrier_model, board_model,
+                    crashed_board_state, line_of, mailbox_freerun_model,
+                    mailbox_lockstep_model)
+
+__all__ = [
+    "ANCHORS", "Gate", "InterleavingDriver", "InvariantViolation",
+    "Process", "Result", "Step", "barrier_model", "board_model",
+    "crashed_board_state", "explore", "line_of", "mailbox_freerun_model",
+    "mailbox_lockstep_model",
+]

@@ -1,0 +1,162 @@
+"""Exhaustive interleaving explorer for the protocol models.
+
+A model is a set of `Process`es over one shared-variable dictionary.
+Each process is a straight-line list of `Step`s (plus labeled jump
+targets for retry loops); a step is ATOMIC and should touch at most one
+shared variable — that granularity is what makes the exploration honest:
+every ordering of single-word mmap loads/stores that the real
+`runtime/mailbox.py` code can exhibit corresponds to one schedule here.
+
+`explore` runs a depth-first search over all schedules (which enabled
+process steps next), memoizing visited (shared, locals, pcs) states so
+retry/spin loops terminate.  It reports:
+
+  * invariant violations — a step raised `InvariantViolation`; the
+    schedule prefix that produced it is attached, each entry cross-linked
+    to the concrete `mailbox.py` line the step models, so a violation
+    reads as a replayable adversarial interleaving (the fault-injection
+    harness in `faults` re-drives the real code through these);
+  * deadlocks — states where some process still has steps but no process
+    has an enabled step (a guard-blocked cycle);
+  * completion reachability — whether ANY schedule drives every process
+    to its end; a protocol whose seqlock wedges (e.g. the crashed-writer
+    odd lock word) spins forever instead of blocking, which shows up as
+    an UNREACHABLE completion rather than a guard deadlock.
+
+Shared/local values must be hashable (ints, strings, tuples).  Ghost
+variables (e.g. the tuple of fully published payload values) live in the
+same shared dict; they model the specification, not the file.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Optional, Tuple, Union
+
+
+class InvariantViolation(AssertionError):
+    """A protocol safety invariant failed on some interleaving."""
+
+
+@dataclasses.dataclass(frozen=True)
+class Step:
+    """One atomic transition.
+
+    `run(shared, local)` mutates the dicts in place and returns the next
+    program counter: None for fall-through, a string for a labeled jump.
+    `guard(shared, local) -> bool` makes the step BLOCKING (models a
+    `_wait` spin): the step is simply not enabled until the guard holds.
+    `line` is the 1-based `runtime/mailbox.py` line this step models
+    (0 for model-only glue such as ghost bookkeeping).
+    """
+    name: str
+    line: int
+    run: Callable[[dict, dict], Optional[str]]
+    guard: Optional[Callable[[dict, dict], bool]] = None
+
+
+class Process:
+    """A named straight-line program with labeled jump targets."""
+
+    def __init__(self, name: str, local: Optional[dict] = None):
+        self.name = name
+        self.steps: List[Step] = []
+        self.labels: Dict[str, int] = {}
+        self.local0 = dict(local or {})
+
+    def label(self, name: str) -> "Process":
+        self.labels[name] = len(self.steps)
+        return self
+
+    def step(self, name: str, line: int,
+             run: Callable[[dict, dict], Optional[str]],
+             guard: Optional[Callable[[dict, dict], bool]] = None
+             ) -> "Process":
+        self.steps.append(Step(name, line, run, guard))
+        return self
+
+    def resolve(self, target: Union[str, int]) -> int:
+        return self.labels[target] if isinstance(target, str) else target
+
+
+@dataclasses.dataclass
+class Result:
+    violations: List[Tuple[str, Tuple[str, ...]]]
+    deadlocks: List[Tuple[str, ...]]
+    states: int
+    complete: bool            # False if max_states truncated the search
+    completion_reached: bool  # some schedule finishes every process
+
+    @property
+    def clean(self) -> bool:
+        return (not self.violations and not self.deadlocks
+                and self.complete and self.completion_reached)
+
+    def report(self) -> str:
+        lines = [f"{self.states} states explored "
+                 f"({'complete' if self.complete else 'TRUNCATED'}), "
+                 f"completion {'reachable' if self.completion_reached else 'UNREACHABLE'}"]
+        for msg, trace in self.violations:
+            lines.append(f"violation: {msg}")
+            lines.append(f"  schedule: {' -> '.join(trace[-12:])}")
+        for trace in self.deadlocks:
+            lines.append(f"deadlock after: {' -> '.join(trace[-12:])}")
+        return "\n".join(lines)
+
+
+def _freeze(d: dict) -> tuple:
+    return tuple(sorted(d.items()))
+
+
+def explore(shared0: dict, procs: List[Process], max_states: int = 400_000,
+            max_violations: int = 8) -> Result:
+    """DFS over every schedule of the processes' enabled atomic steps."""
+    init = (_freeze(shared0),
+            tuple((0, _freeze(p.local0)) for p in procs))
+    visited = {init}
+    stack: List[Tuple[tuple, Tuple[str, ...]]] = [(init, ())]
+    violations: List[Tuple[str, Tuple[str, ...]]] = []
+    deadlocks: List[Tuple[str, ...]] = []
+    states, complete, completion = 1, True, False
+
+    while stack:
+        (fsh, flocs), trace = stack.pop()
+        enabled = []
+        for i, p in enumerate(procs):
+            pc, floc = flocs[i]
+            if pc >= len(p.steps):
+                continue
+            st = p.steps[pc]
+            if st.guard is None or st.guard(dict(fsh), dict(floc)):
+                enabled.append((i, pc, st))
+        if not enabled:
+            if all(pc >= len(p.steps) for (pc, _), p in zip(flocs, procs)):
+                completion = True
+            else:
+                deadlocks.append(trace)
+            continue
+        for i, pc, st in enabled:
+            sh2 = dict(fsh)
+            lo2 = dict(flocs[i][1])
+            label = f"{procs[i].name}.{st.name}" + \
+                (f" [mailbox.py:{st.line}]" if st.line else "")
+            try:
+                ret = st.run(sh2, lo2)
+            except InvariantViolation as e:
+                violations.append((str(e), trace + (label,)))
+                if len(violations) >= max_violations:
+                    return Result(violations, deadlocks, states,
+                                  complete, completion)
+                continue
+            new_pc = pc + 1 if ret is None else procs[i].resolve(ret)
+            nlocs = list(flocs)
+            nlocs[i] = (new_pc, _freeze(lo2))
+            ns = (_freeze(sh2), tuple(nlocs))
+            if ns in visited:
+                continue
+            visited.add(ns)
+            states += 1
+            if states > max_states:
+                complete = False
+                continue
+            stack.append((ns, trace + (label,)))
+    return Result(violations, deadlocks, states, complete, completion)

@@ -1,0 +1,102 @@
+"""Fault-injection harness: adversarial interleavings on the REAL code.
+
+The explorer (`repro.analysis.explorer` over `repro.analysis.model`)
+finds the schedules that would break the mailbox protocols; this module
+re-drives the actual `runtime/mailbox.py` mmap implementation through
+those schedules.  `Mailbox`/`Board` expose trace hooks at every
+publish/ack/snapshot boundary (`mailbox.set_hook`); `InterleavingDriver`
+installs a hook that BLOCKS the acting thread at a registered `Gate`
+until the test releases it, so a test can hold a reader mid-snapshot
+while a writer (or a crashed-and-re-attached writer) races past it —
+exactly the windows where torn reads and ABA acceptance hide.
+
+Usage::
+
+    with InterleavingDriver() as drv:
+        gate = drv.gate("mbx.read.snap")      # pause 1st snapshot here
+        t = threading.Thread(target=reader_call)
+        t.start()
+        gate.wait_reached()                   # reader is mid-snapshot
+        writer.write(...)                     # race it
+        gate.release()
+        t.join()
+
+Gates fire once (on their n-th matching event) and pass every other
+event through untouched; leaving the `with` block clears the hook and
+releases everything, so a failing assertion can never wedge the suite.
+"""
+from __future__ import annotations
+
+import threading
+from typing import List, Optional
+
+from ..runtime import mailbox
+
+_GATE_TIMEOUT_S = 20.0
+
+
+class Gate:
+    """One pause point: trips on the `hit`-th occurrence of `event`
+    (optionally filtered to paths containing `path_substr`), blocking the
+    acting thread until `release()`."""
+
+    def __init__(self, event: str, hit: int = 1,
+                 path_substr: Optional[str] = None):
+        self.event = event
+        self.path_substr = path_substr
+        self._hits_left = hit
+        self.reached = threading.Event()
+        self.released = threading.Event()
+
+    def matches(self, event: str, path: str) -> bool:
+        if self.reached.is_set() or event != self.event:
+            return False
+        if self.path_substr is not None and self.path_substr not in path:
+            return False
+        self._hits_left -= 1
+        return self._hits_left <= 0
+
+    def wait_reached(self, timeout: float = _GATE_TIMEOUT_S):
+        if not self.reached.wait(timeout):
+            raise TimeoutError(
+                f"gate {self.event!r} never reached within {timeout}s")
+
+    def release(self):
+        self.released.set()
+
+
+class InterleavingDriver:
+    """Context manager owning the mailbox trace hook for one scenario."""
+
+    def __init__(self):
+        self._gates: List[Gate] = []
+        self._lock = threading.Lock()
+
+    def gate(self, event: str, hit: int = 1,
+             path_substr: Optional[str] = None) -> Gate:
+        g = Gate(event, hit, path_substr)
+        with self._lock:
+            self._gates.append(g)
+        return g
+
+    def _on_event(self, event: str, path: str):
+        with self._lock:
+            tripped = next((g for g in self._gates
+                            if g.matches(event, path)), None)
+        if tripped is not None:
+            tripped.reached.set()
+            # block the acting thread inside the protocol window; the
+            # timeout guarantees a broken test surfaces as an assertion,
+            # not a hang
+            tripped.released.wait(_GATE_TIMEOUT_S)
+
+    def __enter__(self) -> "InterleavingDriver":
+        mailbox.set_hook(self._on_event)
+        return self
+
+    def __exit__(self, exc_type, exc, tb):
+        mailbox.set_hook(None)
+        with self._lock:
+            for g in self._gates:
+                g.released.set()
+        return False

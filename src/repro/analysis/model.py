@@ -1,0 +1,455 @@
+"""Small-model abstractions of the `runtime/mailbox.py` protocols.
+
+Each protocol — `Mailbox` (lock-step rendezvous and free-run seqlock),
+`Board` (depth-2 double buffer with per-reader acks), `Barrier` — is
+rebuilt here as explicit atomic load/store step sequences over a shared
+dictionary, at the granularity of the real code's single-word mmap
+accesses.  Payloads are modeled as TWO shared words written and read by
+separate steps, so a torn read (a snapshot mixing two publishes) is
+representable; the ghost tuple `shared["published"]` records every value
+whose publish store completed, which is the specification the invariants
+check against.
+
+The safety invariants encoded in the step bodies (raising
+`InvariantViolation` on the adversarial interleaving that breaks them):
+
+  * every accepted snapshot is a COMPLETE published payload — the two
+    words agree and their value is in the ghost `published` tuple;
+  * a lock-step `Mailbox.read()` call n returns exactly entry n, and a
+    lock-step `Board` reader of logical entry n returns exactly entry n;
+  * the depth-2 board never laps a live reader: the writer's seqlock-odd
+    store on a slot requires every reader to have acked the entry that
+    slot still holds;
+  * free-run writers never block — structurally, no free-run writer step
+    carries a guard (asserted by `tests/test_analysis.py`);
+  * lock-step schedules deadlock-free and completion-reachable — checked
+    by the explorer itself.
+
+Every step is cross-linked to the concrete `mailbox.py` line it models:
+`ANCHORS` maps step kinds to source fragments, resolved against the real
+module source at import time (`line_of`), so the links cannot silently
+rot — a drifting fragment fails `tests/test_analysis.py` loudly.
+
+The two (fixed) crash-recovery bugs of ISSUE 6 are re-introducible as
+model knobs, pinning that the checker actually has teeth:
+
+  * `resume="bug"` — a re-attached free-run `Mailbox` writer restarts
+    its counter at 0 instead of resuming from the header: the seqlock
+    replays old values and a paused reader's re-check accepts a torn
+    snapshot (ABA);
+  * `attach_fix=False` with a `crashed_slot` — the `Board` writer
+    re-attaches over an odd slot lock word without rounding it up: the
+    slot reads as published mid-write (torn) and as in-progress after
+    publish (readers starve: completion becomes unreachable).
+"""
+from __future__ import annotations
+
+import inspect
+from typing import Optional, Tuple
+
+from ..runtime import mailbox
+from .explorer import InvariantViolation, Process
+
+_SRC = inspect.getsource(mailbox).splitlines()
+
+# step kind -> unique source fragment in runtime/mailbox.py, or
+# (fragment, occurrence_index) when the same text appears on several lines
+ANCHORS = {
+    "mbx.resume": "self._seq = w if lockstep else (w + 1) // 2",
+    "mbx.lockstep.wait_ack": ">= n - 1",
+    "mbx.lockstep.payload": ("mm[_MBX_HDR.size:self._size] = payload", 0),
+    "mbx.lockstep.publish": "self._put(_MBX_OFF_WSEQ, n)  # publish",
+    "mbx.freerun.lock": "self._put(_MBX_OFF_WSEQ, 2 * n - 1)",
+    "mbx.freerun.payload": ("mm[_MBX_HDR.size:self._size] = payload", 1),
+    "mbx.freerun.publish": "self._put(_MBX_OFF_WSEQ, 2 * n)",
+    "mbx.read.wait": "self._get(_MBX_OFF_WSEQ) >= n, self.timeout",
+    "mbx.read.copy_lockstep":
+        ("out = bytes(self._mm[_MBX_HDR.size:self._size])", 0),
+    "mbx.read.ack": "self._put(_MBX_OFF_ACK, n)",
+    "mbx.read.s1": "s1 = self._get(_MBX_OFF_WSEQ)",
+    "mbx.read.parity": "if s1 % 2 == 0:",
+    "mbx.read.copy": ("out = bytes(self._mm[_MBX_HDR.size:self._size])", 1),
+    "mbx.read.recheck": "self._get(_MBX_OFF_WSEQ) == s1",
+    "board.recover": "_U64.pack_into(self._mm, off + _SLOT_OFF_LOCK, lock + 1)",
+    "board.resume": "self._seq = top",
+    "board.wait_acks": "self._ack(r) >= n - 2",
+    "board.lock_odd": "lock + 1)  # odd",
+    "board.payload": "mm[off + _SLOT_HDR.size:off + self._stride] = payload",
+    "board.logical": "_U64.pack_into(mm, off + _SLOT_OFF_LOGICAL, n)",
+    "board.publish": "lock + 2)  # even",
+    "board.read.s1": "s1 = _U64.unpack_from(self._mm, off + _SLOT_OFF_LOCK)[0]",
+    "board.read.parity": "if s1 == 0 or s1 % 2 == 1:",
+    "board.read.logical": ("logical = _U64.unpack_from(self._mm,", 1),
+    "board.read.copy": "payload = bytes(self._mm[off + _SLOT_HDR.size",
+    "board.read.recheck": "!= s1",
+    "board.read.exact": "snap[0] == n",
+    "board.read.ack": "_U64.size * reader_rank, n)",
+    "barrier.bump": "_U64.pack_into(self._mm, _U64.size * self.rank, n)",
+    "barrier.wait": "_U64.unpack_from(self._mm, _U64.size * r)[0] >= n",
+}
+
+
+def line_of(kind: str) -> int:
+    """1-based `runtime/mailbox.py` line the anchor resolves to."""
+    spec = ANCHORS[kind]
+    frag, idx = spec if isinstance(spec, tuple) else (spec, None)
+    hits = [i + 1 for i, ln in enumerate(_SRC) if frag in ln]
+    if idx is None:
+        if len(hits) != 1:
+            raise LookupError(
+                f"anchor {kind!r}: fragment {frag!r} matched lines {hits} "
+                f"in runtime/mailbox.py (need exactly one)")
+        return hits[0]
+    if idx >= len(hits):
+        raise LookupError(
+            f"anchor {kind!r}: occurrence {idx} of {frag!r} not found "
+            f"(only {len(hits)} matches)")
+    return hits[idx]
+
+
+def _enc(gen: int, n: int) -> int:
+    """Payload word value for entry n of writer generation gen; the entry
+    number is recoverable as value % 100 for the exactness invariants."""
+    return 100 * gen + n
+
+
+# ---------------------------------------------------------------------------
+# Mailbox, free-run seqlock protocol
+
+
+def _mbx_freerun_writer(name: str, gens: Tuple[Tuple[int, int], ...],
+                        resume: Optional[str]) -> Process:
+    """gens = ((gen_id, n_entries), ...); between generations the writer
+    'crashes' and re-attaches, re-deriving its counter per `resume`:
+    "fixed" (the shipped `Mailbox.for_writer` deferral into
+    `_resume_counter`) or "bug" (the pre-fix restart at 0)."""
+    w = Process(name, local={"n": 0})
+    for gi, (gen, count) in enumerate(gens):
+        if gi > 0:
+            def reattach(sh, lo):
+                lo["n"] = (sh["wseq"] + 1) // 2 if resume == "fixed" else 0
+            w.step(f"g{gen}.reattach", line_of("mbx.resume"), reattach)
+        for i in range(count):
+            def lock(sh, lo):
+                lo["n"] += 1
+                sh["wseq"] = 2 * lo["n"] - 1
+            w.step(f"g{gen}e{i}.lock", line_of("mbx.freerun.lock"), lock)
+            def p0(sh, lo, g=gen):
+                sh["p0"] = _enc(g, lo["n"])
+            w.step(f"g{gen}e{i}.p0", line_of("mbx.freerun.payload"), p0)
+            def p1(sh, lo, g=gen):
+                sh["p1"] = _enc(g, lo["n"])
+            w.step(f"g{gen}e{i}.p1", line_of("mbx.freerun.payload"), p1)
+            def pub(sh, lo, g=gen):
+                sh["wseq"] = 2 * lo["n"]
+                sh["published"] += (_enc(g, lo["n"]),)
+            w.step(f"g{gen}e{i}.pub", line_of("mbx.freerun.publish"), pub)
+    return w
+
+
+def _mbx_freerun_reader(name: str, attempts: int, retries: int) -> Process:
+    r = Process(name, local={"s1": 0, "c0": 0, "c1": 0, "rt": 0})
+    for a in range(attempts):
+        nxt = f"a{a + 1}" if a + 1 < attempts else "end"
+        cur = f"a{a}"
+        r.label(cur)
+        def s1(sh, lo):
+            lo["s1"] = sh["wseq"]
+        r.step(f"a{a}.s1", line_of("mbx.read.s1"), s1)
+        def chk(sh, lo, nxt=nxt, cur=cur):
+            if lo["s1"] == 0:
+                return nxt              # nothing ever published: None
+            if lo["s1"] % 2 == 1:       # write in progress: poll again
+                lo["rt"] += 1
+                return nxt if lo["rt"] > retries else cur
+            return None
+        r.step(f"a{a}.chk", line_of("mbx.read.parity"), chk)
+        def c0(sh, lo):
+            lo["c0"] = sh["p0"]
+        r.step(f"a{a}.c0", line_of("mbx.read.copy"), c0)
+        def c1(sh, lo):
+            lo["c1"] = sh["p1"]
+        r.step(f"a{a}.c1", line_of("mbx.read.copy"), c1)
+        def re(sh, lo, nxt=nxt, cur=cur):
+            if sh["wseq"] == lo["s1"]:  # seqlock re-check accepted
+                if lo["c0"] != lo["c1"] or lo["c0"] not in sh["published"]:
+                    raise InvariantViolation(
+                        f"torn mailbox read: accepted snapshot "
+                        f"({lo['c0']}, {lo['c1']}) at seq {lo['s1']} is "
+                        f"not a fully published payload")
+                return nxt
+            lo["rt"] += 1               # torn: retry the snapshot
+            return nxt if lo["rt"] > retries else cur
+        r.step(f"a{a}.re", line_of("mbx.read.recheck"), re)
+    r.label("end")
+    return r
+
+
+def mailbox_freerun_model(n_entries: int = 2, n_readers: int = 1,
+                          attempts: int = 2, retries: int = 2,
+                          resume: Optional[str] = None,
+                          pre_entries: int = 1):
+    """Free-run seqlock mailbox.  `resume=None`: one writer generation of
+    `n_entries`.  `resume="fixed"|"bug"`: `pre_entries` published, writer
+    crash + re-attach, then `n_entries` more (ISSUE 6 satellite 1)."""
+    gens = ((1, n_entries),) if resume is None else \
+        ((1, pre_entries), (2, n_entries))
+    shared = {"wseq": 0, "p0": 0, "p1": 0, "published": ()}
+    procs = [_mbx_freerun_writer("writer", gens, resume)]
+    procs += [_mbx_freerun_reader(f"reader{k}", attempts, retries)
+              for k in range(n_readers)]
+    return shared, procs
+
+
+# ---------------------------------------------------------------------------
+# Mailbox, lock-step rendezvous protocol
+
+
+def mailbox_lockstep_model(n_entries: int = 3):
+    """Lock-step rendezvous: writer blocks on ack n-1, reader blocks on
+    entry n and must receive EXACTLY entry n, complete."""
+    shared = {"wseq": 0, "ack": 0, "p0": 0, "p1": 0, "published": ()}
+    w = Process("writer")
+    r = Process("reader", local={"c0": 0, "c1": 0})
+    for i in range(n_entries):
+        n, v = i + 1, _enc(1, i + 1)
+        w.step(f"e{n}.wait", line_of("mbx.lockstep.wait_ack"),
+               lambda sh, lo: None,
+               guard=lambda sh, lo, n=n: sh["ack"] >= n - 1)
+        def p0(sh, lo, v=v):
+            sh["p0"] = v
+        w.step(f"e{n}.p0", line_of("mbx.lockstep.payload"), p0)
+        def p1(sh, lo, v=v):
+            sh["p1"] = v
+        w.step(f"e{n}.p1", line_of("mbx.lockstep.payload"), p1)
+        def pub(sh, lo, n=n, v=v):
+            sh["wseq"] = n
+            sh["published"] += (v,)
+        w.step(f"e{n}.pub", line_of("mbx.lockstep.publish"), pub)
+
+        r.step(f"e{n}.wait", line_of("mbx.read.wait"),
+               lambda sh, lo: None,
+               guard=lambda sh, lo, n=n: sh["wseq"] >= n)
+        def c0(sh, lo):
+            lo["c0"] = sh["p0"]
+        r.step(f"e{n}.c0", line_of("mbx.read.copy_lockstep"), c0)
+        def c1(sh, lo):
+            lo["c1"] = sh["p1"]
+        r.step(f"e{n}.c1", line_of("mbx.read.copy_lockstep"), c1)
+        def ack(sh, lo, n=n, v=v):
+            if lo["c0"] != v or lo["c1"] != v:
+                raise InvariantViolation(
+                    f"lock-step read {n} returned ({lo['c0']}, {lo['c1']}), "
+                    f"expected exactly entry {n} = ({v}, {v})")
+            sh["ack"] = n
+        r.step(f"e{n}.ack", line_of("mbx.read.ack"), ack)
+    return shared, [w, r]
+
+
+# ---------------------------------------------------------------------------
+# Board, depth-2 double buffer with per-reader acks
+
+
+def _board_writer(n_entries: int, n_readers: int, lockstep: bool,
+                  crashed: bool, attach_fix: bool, gen: int) -> Process:
+    w = Process("writer", local={"n": 0, "l": 0})
+    if crashed:
+        if attach_fix:
+            for slot in (0, 1):
+                def rec(sh, lo, s=slot):
+                    if sh[f"l{s}"] % 2 == 1:
+                        sh[f"l{s}"] += 1
+                w.step(f"recover.l{slot}", line_of("board.recover"), rec)
+            def res(sh, lo):
+                lo["n"] = max(sh["g0"], sh["g1"])
+            w.step("recover.seq", line_of("board.resume"), res)
+        # pre-fix Board.for_writer: no repair, counter restarts at 0
+    for i in range(n_entries):
+        def wait(sh, lo):
+            lo["n"] += 1
+        w.step(f"e{i}.wait", line_of("board.wait_acks"), wait,
+               guard=None if not lockstep else (
+                   lambda sh, lo: lo["n"] + 1 <= 2 or
+                   all(a >= lo["n"] + 1 - 2 for a in sh["acks"])))
+        def lockr(sh, lo):
+            slot = lo["n"] % 2
+            if lockstep:
+                live = sh[f"g{slot}"]   # entry this slot still holds
+                if live > 0 and any(a < live for a in sh["acks"]):
+                    raise InvariantViolation(
+                        f"board writer laps a live reader: overwriting "
+                        f"slot {slot} holding entry {live} before every "
+                        f"reader acked it (acks={sh['acks']})")
+            lo["l"] = sh[f"l{slot}"]
+            sh[f"l{slot}"] = lo["l"] + 1
+        w.step(f"e{i}.lock", line_of("board.lock_odd"), lockr)
+        def p0(sh, lo, g=gen):
+            sh[f"p{lo['n'] % 2}0"] = _enc(g, lo["n"])
+        w.step(f"e{i}.p0", line_of("board.payload"), p0)
+        def p1(sh, lo, g=gen):
+            sh[f"p{lo['n'] % 2}1"] = _enc(g, lo["n"])
+        w.step(f"e{i}.p1", line_of("board.payload"), p1)
+        def logical(sh, lo):
+            sh[f"g{lo['n'] % 2}"] = lo["n"]
+        w.step(f"e{i}.logical", line_of("board.logical"), logical)
+        def pub(sh, lo, g=gen):
+            sh[f"l{lo['n'] % 2}"] = lo["l"] + 2
+            sh["published"] += (_enc(g, lo["n"]),)
+        w.step(f"e{i}.pub", line_of("board.publish"), pub)
+    return w
+
+
+def _board_reader_freerun(k: int, attempts: int) -> Process:
+    r = Process(f"reader{k}",
+                local={"s1": 0, "lg": 0, "c0": 0, "c1": 0})
+    for a in range(attempts):
+        nxt = f"a{a + 1}" if a + 1 < attempts else "end"
+        r.label(f"a{a}")
+        for slot in (0, 1):
+            skip = f"a{a}.s{slot + 1}" if slot == 0 else nxt
+            r.label(f"a{a}.s{slot}")
+            def s1(sh, lo, s=slot):
+                lo["s1"] = sh[f"l{s}"]
+            r.step(f"a{a}.s{slot}.s1", line_of("board.read.s1"), s1)
+            def chk(sh, lo, skip=skip):
+                if lo["s1"] == 0 or lo["s1"] % 2 == 1:
+                    return skip         # slot empty or mid-write: skip it
+                return None
+            r.step(f"a{a}.s{slot}.chk", line_of("board.read.parity"), chk)
+            def lg(sh, lo, s=slot):
+                lo["lg"] = sh[f"g{s}"]
+            r.step(f"a{a}.s{slot}.lg", line_of("board.read.logical"), lg)
+            def c0(sh, lo, s=slot):
+                lo["c0"] = sh[f"p{s}0"]
+            r.step(f"a{a}.s{slot}.c0", line_of("board.read.copy"), c0)
+            def c1(sh, lo, s=slot):
+                lo["c1"] = sh[f"p{s}1"]
+            r.step(f"a{a}.s{slot}.c1", line_of("board.read.copy"), c1)
+            def re(sh, lo, s=slot, skip=skip):
+                if sh[f"l{s}"] != lo["s1"] or lo["lg"] == 0:
+                    return skip         # torn or crash-recovered: discard
+                if (lo["c0"] != lo["c1"]
+                        or lo["c0"] not in sh["published"]
+                        or lo["c0"] % 100 != lo["lg"]):
+                    raise InvariantViolation(
+                        f"torn board read: slot {s} accepted snapshot "
+                        f"({lo['c0']}, {lo['c1']}) labeled entry "
+                        f"{lo['lg']} is not that published payload")
+                return None
+            r.step(f"a{a}.s{slot}.re", line_of("board.read.recheck"), re)
+    r.label("end")
+    return r
+
+
+def _board_reader_lockstep(k: int, n_readers: int,
+                           n_entries: int) -> Process:
+    r = Process(f"reader{k}",
+                local={"s1": 0, "lg": 0, "c0": 0, "c1": 0})
+    for i in range(n_entries):
+        n, slot = i + 1, (i + 1) % 2
+        spin = f"n{n}.spin"
+        r.label(spin)
+        def s1(sh, lo, s=slot):
+            lo["s1"] = sh[f"l{s}"]
+        r.step(f"n{n}.s1", line_of("board.read.s1"), s1)
+        def chk(sh, lo, spin=spin):
+            if lo["s1"] == 0 or lo["s1"] % 2 == 1:
+                return spin
+            return None
+        r.step(f"n{n}.chk", line_of("board.read.parity"), chk)
+        def lg(sh, lo, s=slot):
+            lo["lg"] = sh[f"g{s}"]
+        r.step(f"n{n}.lg", line_of("board.read.logical"), lg)
+        def exact(sh, lo, n=n, spin=spin):
+            return spin if lo["lg"] != n else None
+        r.step(f"n{n}.exact", line_of("board.read.exact"), exact)
+        def c0(sh, lo, s=slot):
+            lo["c0"] = sh[f"p{s}0"]
+        r.step(f"n{n}.c0", line_of("board.read.copy"), c0)
+        def c1(sh, lo, s=slot):
+            lo["c1"] = sh[f"p{s}1"]
+        r.step(f"n{n}.c1", line_of("board.read.copy"), c1)
+        def re(sh, lo, s=slot, n=n, spin=spin):
+            if sh[f"l{s}"] != lo["s1"]:
+                return spin
+            v = _enc(1, n)
+            if lo["c0"] != lo["c1"] or lo["c0"] % 100 != n or \
+                    lo["c0"] not in sh["published"]:
+                raise InvariantViolation(
+                    f"lock-step board read {n} accepted "
+                    f"({lo['c0']}, {lo['c1']}), expected entry {n} "
+                    f"(a published ({v}, {v}))")
+            return None
+        r.step(f"n{n}.re", line_of("board.read.recheck"), re)
+        def ack(sh, lo, k=k, n=n):
+            acks = list(sh["acks"])
+            acks[k] = n
+            sh["acks"] = tuple(acks)
+        r.step(f"n{n}.ack", line_of("board.read.ack"), ack)
+    return r
+
+
+def board_model(n_entries: int = 3, n_readers: int = 2,
+                lockstep: bool = True, attempts: int = 1,
+                crashed_slot: Optional[dict] = None,
+                attach_fix: bool = True):
+    """Depth-2 board.  `crashed_slot` overlays a prior writer incarnation
+    that died mid-publish (e.g. an odd slot lock word); `attach_fix`
+    selects the shipped `Board._recover` repair vs the pre-fix blind
+    re-attach (ISSUE 6 satellite 2)."""
+    shared = {"l0": 0, "l1": 0, "g0": 0, "g1": 0,
+              "p00": 0, "p01": 0, "p10": 0, "p11": 0,
+              "acks": (0,) * n_readers, "published": ()}
+    crashed = crashed_slot is not None
+    if crashed:
+        shared.update(crashed_slot)
+    gen = 2 if crashed else 1
+    procs = [_board_writer(n_entries, n_readers, lockstep, crashed,
+                           attach_fix, gen)]
+    if lockstep:
+        procs += [_board_reader_lockstep(k, n_readers, n_entries)
+                  for k in range(n_readers)]
+    else:
+        procs += [_board_reader_freerun(k, attempts)
+                  for k in range(n_readers)]
+    return shared, procs
+
+
+def crashed_board_state(published_entries: int = 1) -> dict:
+    """Shared-state overlay for a writer that fully published
+    `published_entries` entries and then died mid-publish of the next:
+    the victim slot's lock word is ODD with a half-written payload."""
+    n = published_entries           # entries 1..n complete; n+1 torn
+    v = _enc(1, n)
+    dead, live = (n + 1) % 2, n % 2
+    state = {f"l{live}": 2, f"g{live}": n,
+             f"p{live}0": v, f"p{live}1": v,
+             f"l{dead}": 1,                       # odd: died mid-publish
+             f"p{dead}0": _enc(1, n + 1),         # half-written payload
+             "published": (v,)}
+    if n > 1:
+        raise ValueError("model pre-state supports published_entries=1")
+    return state
+
+
+# ---------------------------------------------------------------------------
+# Barrier
+
+
+def barrier_model(n_ranks: int = 3, rounds: int = 2):
+    shared = {"cells": (0,) * n_ranks}
+    procs = []
+    for k in range(n_ranks):
+        p = Process(f"rank{k}")
+        for rnd in range(1, rounds + 1):
+            def bump(sh, lo, k=k, rnd=rnd):
+                cells = list(sh["cells"])
+                cells[k] = rnd
+                sh["cells"] = tuple(cells)
+            p.step(f"r{rnd}.bump", line_of("barrier.bump"), bump)
+            p.step(f"r{rnd}.wait", line_of("barrier.wait"),
+                   lambda sh, lo: None,
+                   guard=lambda sh, lo, rnd=rnd:
+                       all(c >= rnd for c in sh["cells"]))
+        procs.append(p)
+    return shared, procs

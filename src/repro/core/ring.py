@@ -95,8 +95,22 @@ class Comm:
     def pmean_all(self, tree):
         raise NotImplementedError
 
+    def recv_hypercube(self, tree, stage: int):
+        """Value from XOR partner rank ^ 2^stage (the dbtree mode's
+        recursive-doubling hop).  Backends without a lock-step barrier
+        tree (the proc runtime) implement this as a loud
+        NotImplementedError — the surface stays uniform either way."""
+        raise NotImplementedError
+
     def inner_index(self, like):
         """Per-rank inner-group index, broadcastable against mask use."""
+        raise NotImplementedError
+
+    def mask_where(self, cond, a, b):
+        """Select `a` where `cond` else `b`, leafwise.  Backends refine
+        the predicate name to document their layout (`cond_per_rank` on
+        VmapComm's stacked axis, `cond_scalar` inside shard_map/proc) —
+        `scripts/repro_lint.py` accepts suffix refinements only."""
         raise NotImplementedError
 
 

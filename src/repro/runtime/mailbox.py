@@ -37,16 +37,29 @@ read side catches the (rare) torn snapshot and retries.  Every spin loop
 carries a timeout so a crashed peer surfaces as `MailboxTimeout` instead
 of a hung test suite.
 
+Crash recovery: a writer that dies and re-attaches (checkpoint resume)
+must continue the on-file sequence, never restart it — a restarted
+counter would replay already-used seqlock values and an old snapshot's
+re-check could accept a torn payload (the classic ABA).  `for_writer`
+therefore resumes the entry counter from the published header, and
+`Board` attach rounds a crashed-mid-publish slot's odd lock word up to
+even so the seqlock can advance again.  Both protocols (and both fixes)
+are model-checked exhaustively at small bounds by `repro.analysis`; the
+`set_hook` trace points below let `repro.analysis.faults` drive this
+real code through the adversarial interleavings the explorer finds.
+
 File layout (`Mailbox`): u64 write_seq | u64 read_ack | i64 tag |
 u64 nbytes | payload.  Files appear atomically (temp + rename), so
-existence implies full size.
+existence implies full size.  All header offsets are derived from the
+struct layouts below — `scripts/repro_lint.py` rejects hand-written
+magic offsets in this module.
 """
 from __future__ import annotations
 
 import os
 import struct
 import time
-from typing import Optional, Tuple
+from typing import Callable, Optional, Tuple
 
 _POLL_S = 2e-4
 
@@ -55,6 +68,46 @@ _MBX_HDR = struct.Struct("<QQqQ")
 # Board slot header: seqlock, logical_seq, tag
 _SLOT_HDR = struct.Struct("<QQq")
 _U64 = struct.Struct("<Q")
+_I64 = struct.Struct("<q")
+
+
+def field_offsets(hdr: struct.Struct) -> Tuple[int, ...]:
+    """Cumulative byte offset of every field in a little-endian struct —
+    the single source of truth for the header layouts (no magic 0/8/16/24
+    literals; `scripts/repro_lint.py` enforces this)."""
+    offs, off = [], 0
+    for ch in hdr.format.lstrip("<"):
+        offs.append(off)
+        off += struct.calcsize("<" + ch)
+    assert off == hdr.size, (off, hdr.size)
+    return tuple(offs)
+
+
+_MBX_OFF_WSEQ, _MBX_OFF_ACK, _MBX_OFF_TAG, _MBX_OFF_NBYTES = \
+    field_offsets(_MBX_HDR)
+_SLOT_OFF_LOCK, _SLOT_OFF_LOGICAL, _SLOT_OFF_TAG = field_offsets(_SLOT_HDR)
+
+
+# -- fault-injection trace hook ----------------------------------------------
+#
+# The analysis lane's harness (`repro.analysis.faults`) installs a callable
+# here to pause real threads at protocol boundaries and force the
+# adversarial interleavings the model checker finds.  `None` (the default)
+# costs one attribute load per boundary.
+
+_HOOK: Optional[Callable[[str, str], None]] = None
+
+
+def set_hook(fn: Optional[Callable[[str, str], None]]):
+    """Install (or clear with None) the trace hook: fn(event, path) is
+    called at every publish/ack/snapshot boundary, in the acting thread."""
+    global _HOOK
+    _HOOK = fn
+
+
+def _trace(event: str, path: str):
+    if _HOOK is not None:
+        _HOOK(event, path)
 
 
 class MailboxTimeout(RuntimeError):
@@ -94,6 +147,7 @@ class Mailbox:
         self._file = None
         self._mm = None
         self._seq = 0                   # entries written/read so far
+        self._resume_pending = False
 
     # -- construction --------------------------------------------------------
 
@@ -103,6 +157,13 @@ class Mailbox:
         if not os.path.exists(path):
             _create_file(path, mbx._size)
         mbx._ensure_open()
+        # Re-attach to an existing window (worker restart): the counter
+        # must RESUME from the published header, not restart at 0 — a
+        # replayed sequence value would let an old reader snapshot pass
+        # its seqlock re-check over a torn payload (ABA).  The header's
+        # meaning depends on the protocol (lock-step: n; free-run: 2n),
+        # which is only known at the first write, so defer the decode.
+        mbx._resume_pending = mbx._get(_MBX_OFF_WSEQ) != 0
         return mbx
 
     @classmethod
@@ -127,26 +188,42 @@ class Mailbox:
 
     # -- write side ----------------------------------------------------------
 
+    def _resume_counter(self, lockstep: bool):
+        """Decode the on-file header into the resumed entry counter.
+        Lock-step publishes n; free-run publishes 2n (odd 2n-1 == died
+        mid-publish, so round UP: the next publish must move the seqlock
+        strictly forward past every value a live reader may hold)."""
+        w = self._get(_MBX_OFF_WSEQ)
+        self._seq = w if lockstep else (w + 1) // 2
+        self._resume_pending = False
+
     def write(self, payload: bytes, tag: int, lockstep: bool):
         assert len(payload) == self.nbytes, (len(payload), self.nbytes)
         mm = self._ensure_open()
+        if self._resume_pending:
+            self._resume_counter(lockstep)
         self._seq += 1
         n = self._seq
         if lockstep:
             # rendezvous: entry n-1 must be consumed before we overwrite
-            _wait(lambda: self._get(8) >= n - 1, self.timeout,
+            _wait(lambda: self._get(_MBX_OFF_ACK) >= n - 1, self.timeout,
                   f"reader ack {n - 1} on {self.path}")
             mm[_MBX_HDR.size:self._size] = payload
-            struct.pack_into("<q", mm, 16, tag)
-            self._put(24, self.nbytes)
-            self._put(0, n)             # publish AFTER the payload
+            _I64.pack_into(mm, _MBX_OFF_TAG, tag)
+            self._put(_MBX_OFF_NBYTES, self.nbytes)
+            _trace("mbx.publish.pre", self.path)
+            self._put(_MBX_OFF_WSEQ, n)  # publish AFTER the payload
+            _trace("mbx.publish.post", self.path)
         else:
             # seqlock overwrite, never waits: odd = write in progress
-            self._put(0, 2 * n - 1)
+            self._put(_MBX_OFF_WSEQ, 2 * n - 1)
+            _trace("mbx.publish.begin", self.path)
             mm[_MBX_HDR.size:self._size] = payload
-            struct.pack_into("<q", mm, 16, tag)
-            self._put(24, self.nbytes)
-            self._put(0, 2 * n)
+            _I64.pack_into(mm, _MBX_OFF_TAG, tag)
+            self._put(_MBX_OFF_NBYTES, self.nbytes)
+            _trace("mbx.publish.pre", self.path)
+            self._put(_MBX_OFF_WSEQ, 2 * n)
+            _trace("mbx.publish.post", self.path)
 
     # -- read side -----------------------------------------------------------
 
@@ -157,25 +234,28 @@ class Mailbox:
             self._ensure_open()
             self._seq += 1
             n = self._seq
-            _wait(lambda: self._get(0) >= n, self.timeout,
+            _wait(lambda: self._get(_MBX_OFF_WSEQ) >= n, self.timeout,
                   f"entry {n} on {self.path}")
             out = bytes(self._mm[_MBX_HDR.size:self._size])
-            tag = struct.unpack_from("<q", self._mm, 16)[0]
-            self._put(8, n)             # acknowledge: writer may overwrite
+            tag = _I64.unpack_from(self._mm, _MBX_OFF_TAG)[0]
+            _trace("mbx.ack.pre", self.path)
+            self._put(_MBX_OFF_ACK, n)  # acknowledge: writer may overwrite
+            _trace("mbx.ack.post", self.path)
             return out, tag
         if self._mm is None and not os.path.exists(self.path):
             return None                 # producer has never deposited
         self._ensure_open()
         deadline = time.monotonic() + self.timeout
         while True:
-            s1 = self._get(0)
+            s1 = self._get(_MBX_OFF_WSEQ)
             if s1 == 0:
                 return None             # file exists but nothing published
             if s1 % 2 == 0:
+                _trace("mbx.read.snap", self.path)
                 out = bytes(self._mm[_MBX_HDR.size:self._size])
-                tag = struct.unpack_from("<q", self._mm, 16)[0]
-                if self._get(0) == s1:  # seqlock re-check: no torn read
-                    return out, tag
+                tag = _I64.unpack_from(self._mm, _MBX_OFF_TAG)[0]
+                if self._get(_MBX_OFF_WSEQ) == s1:  # seqlock re-check
+                    return out, tag     # no torn read
             if time.monotonic() > deadline:
                 raise MailboxTimeout(f"seqlock never settled on {self.path}")
             time.sleep(_POLL_S)
@@ -192,7 +272,7 @@ class Board:
         self.n_ranks = n_ranks
         self._stride = _SLOT_HDR.size + nbytes
         self._acks_off = 2 * self._stride
-        self._size = self._acks_off + 8 * n_ranks
+        self._size = self._acks_off + _U64.size * n_ranks
         self._mm = None
         self._file = None
         self._seq = 0
@@ -203,6 +283,7 @@ class Board:
         if not os.path.exists(path):
             _create_file(path, b._size)
         b._ensure_open()
+        b._recover()
         return b
 
     @classmethod
@@ -215,8 +296,32 @@ class Board:
                                               self.timeout)
         return self._mm
 
+    def _recover(self):
+        """Writer (re)attach repair.  A writer that died mid-publish left
+        its slot's seqlock odd; `write`'s read-increment would then keep
+        every later publish odd and readers would spin to MailboxTimeout.
+        Round each slot's lock word up to even, and resume the entry
+        counter from the highest published logical_seq so the sequence
+        continues instead of replaying (a replay would pair a live
+        reader's stale snapshot with new bytes — the same ABA the Mailbox
+        resume guards against).  Rounding is safe: `write` stores the
+        payload before logical_seq, so a slot whose logical_seq is fresh
+        has a complete payload, and a torn slot keeps its OLD logical_seq
+        and loses the freshest-entry race to its depth-2 sibling."""
+        top = 0
+        for slot in (0, 1):
+            off = slot * self._stride
+            lock = _U64.unpack_from(self._mm, off + _SLOT_OFF_LOCK)[0]
+            if lock % 2 == 1:
+                _U64.pack_into(self._mm, off + _SLOT_OFF_LOCK, lock + 1)
+            logical = _U64.unpack_from(self._mm,
+                                       off + _SLOT_OFF_LOGICAL)[0]
+            top = max(top, logical)
+        self._seq = top
+
     def _ack(self, reader_rank: int) -> int:
-        return _U64.unpack_from(self._mm, self._acks_off + 8 * reader_rank)[0]
+        return _U64.unpack_from(
+            self._mm, self._acks_off + _U64.size * reader_rank)[0]
 
     def write(self, payload: bytes, readers, lockstep: bool):
         """Publish entry n into slot n % 2.  Lock-step writers first wait
@@ -230,22 +335,28 @@ class Board:
             _wait(lambda: all(self._ack(r) >= n - 2 for r in readers),
                   self.timeout, f"board acks {n - 2} on {self.path}")
         off = (n % 2) * self._stride
-        lock = _U64.unpack_from(mm, off)[0]
-        _U64.pack_into(mm, off, lock + 1)                   # odd: writing
+        lock = _U64.unpack_from(mm, off + _SLOT_OFF_LOCK)[0]
+        _U64.pack_into(mm, off + _SLOT_OFF_LOCK, lock + 1)  # odd: writing
+        _trace("board.publish.begin", self.path)
         mm[off + _SLOT_HDR.size:off + self._stride] = payload
-        struct.pack_into("<Q", mm, off + 8, n)
-        _U64.pack_into(mm, off, lock + 2)                   # even: published
+        _U64.pack_into(mm, off + _SLOT_OFF_LOGICAL, n)
+        _trace("board.publish.pre", self.path)
+        _U64.pack_into(mm, off + _SLOT_OFF_LOCK, lock + 2)  # even: published
+        _trace("board.publish.post", self.path)
 
     def _snapshot(self, slot: int) -> Optional[Tuple[int, bytes]]:
         off = slot * self._stride
-        s1 = _U64.unpack_from(self._mm, off)[0]
+        s1 = _U64.unpack_from(self._mm, off + _SLOT_OFF_LOCK)[0]
         if s1 == 0 or s1 % 2 == 1:
             return None
-        logical = struct.unpack_from("<Q", self._mm, off + 8)[0]
+        _trace("board.read.snap", self.path)
+        logical = _U64.unpack_from(self._mm, off + _SLOT_OFF_LOGICAL)[0]
         payload = bytes(self._mm[off + _SLOT_HDR.size:off + self._stride])
-        if _U64.unpack_from(self._mm, off)[0] != s1:
+        if _U64.unpack_from(self._mm, off + _SLOT_OFF_LOCK)[0] != s1:
             return None                                     # torn, retry
-        return logical, payload
+        if logical == 0:
+            return None     # crash-recovered slot: lock rounded even
+        return logical, payload                             # before publish
 
     def read(self, reader_rank: int, lockstep: bool) -> Optional[bytes]:
         """Lock-step: block for logical entry n (the reader's own call
@@ -264,7 +375,10 @@ class Board:
                 return False
 
             _wait(ready, self.timeout, f"board entry {n} on {self.path}")
-            _U64.pack_into(self._mm, self._acks_off + 8 * reader_rank, n)
+            _trace("board.ack.pre", self.path)
+            _U64.pack_into(self._mm,
+                           self._acks_off + _U64.size * reader_rank, n)
+            _trace("board.ack.post", self.path)
             return out[0]
         if self._mm is None and not os.path.exists(self.path):
             return None
@@ -287,14 +401,15 @@ class Barrier:
         self.path = os.path.join(run_dir, "barrier.bin")
         self._round = 0
         if rank == 0 and not os.path.exists(self.path):
-            _create_file(self.path, 8 * n_ranks)
-        self._file, self._mm = _open_mmap(self.path, 8 * n_ranks, timeout)
+            _create_file(self.path, _U64.size * n_ranks)
+        self._file, self._mm = _open_mmap(self.path, _U64.size * n_ranks,
+                                          timeout)
 
     def arrive_and_wait(self, what: str = "barrier"):
         self._round += 1
         n = self._round
-        _U64.pack_into(self._mm, 8 * self.rank, n)
+        _U64.pack_into(self._mm, _U64.size * self.rank, n)
         _wait(lambda: all(
-            _U64.unpack_from(self._mm, 8 * r)[0] >= n
+            _U64.unpack_from(self._mm, _U64.size * r)[0] >= n
             for r in range(self.n_ranks)), self.timeout,
             f"{what} (round {n})")

@@ -36,7 +36,8 @@ from repro.core.workflow import WorkflowConfig
 from repro.problems import get_problem
 from repro.runtime.jitter import JitterConfig
 from repro.runtime.launch import run_proc, wcfg_from_dict, wcfg_to_dict
-from repro.runtime.mailbox import Board, Mailbox, MailboxTimeout
+from repro.runtime.mailbox import (_MBX_OFF_WSEQ, _SLOT_HDR, _SLOT_OFF_LOCK,
+                                   Board, Mailbox, MailboxTimeout)
 from repro.runtime.proccomm import (ProcComm, bytes_to_tree, tree_to_bytes,
                                     warmup_like)
 
@@ -112,6 +113,129 @@ def test_board_freerun_latest_and_lockstep_exact(tmp_path):
     # lock-step reader walks the exact sequence the writer published
     assert rd.read(1, lockstep=True) == struct.pack("<d", 1.0)
     assert rd.read(1, lockstep=True) == struct.pack("<d", 2.0)
+
+
+# ----------------------------------------------------------------------------
+# crash recovery (ISSUE 6 satellites): writer restart must RESUME the
+# on-file protocol state, never replay it — the adversarial interleavings
+# are model-checked in repro.analysis; these pin the real code end-to-end
+
+
+def test_mailbox_writer_reattach_resumes_freerun_seq(tmp_path):
+    p = str(tmp_path / "edge.bin")
+    wr = Mailbox.for_writer(p, 8, timeout=5.0)
+    for n in (1, 2):
+        wr.write(struct.pack("<q", n), tag=n, lockstep=False)
+    wr2 = Mailbox.for_writer(p, 8, timeout=5.0)   # checkpoint-resume restart
+    wr2.write(struct.pack("<q", 3), tag=3, lockstep=False)
+    # seqlock resumed past every value a live reader may hold (2*3), not
+    # restarted at 2*1 — a replayed value is the ABA a paused reader's
+    # re-check cannot catch
+    assert wr2._get(_MBX_OFF_WSEQ) == 6
+    rd = Mailbox.for_reader(p, 8, timeout=5.0)
+    assert rd.read(lockstep=False) == (struct.pack("<q", 3), 3)
+
+
+def test_mailbox_writer_reattach_resumes_lockstep_seq(tmp_path):
+    p = str(tmp_path / "edge.bin")
+    wr = Mailbox.for_writer(p, 8, timeout=5.0)
+    rd = Mailbox.for_reader(p, 8, timeout=5.0)
+    wr.write(struct.pack("<q", 1), tag=1, lockstep=True)
+    assert rd.read(lockstep=True) == (struct.pack("<q", 1), 1)
+    wr2 = Mailbox.for_writer(p, 8, timeout=2.0)
+    # the restarted writer publishes entry 2, not a second entry 1 — the
+    # reader's rendezvous counter is already past 1, so a replay would
+    # strand it in MailboxTimeout
+    wr2.write(struct.pack("<q", 2), tag=2, lockstep=True)
+    assert rd.read(lockstep=True) == (struct.pack("<q", 2), 2)
+
+
+def test_board_crashed_writer_odd_lock_recovers(tmp_path):
+    p = str(tmp_path / "board.bin")
+    wr = Board.for_writer(p, 8, n_ranks=1, timeout=5.0)
+    wr.write(struct.pack("<q", 1), readers=[0], lockstep=False)   # slot 1
+    # simulate dying mid-publish of entry 2: slot 0's seqlock left ODD
+    # over a half-written payload
+    struct.pack_into("<Q", wr._mm, _SLOT_OFF_LOCK, 1)
+    struct.pack_into("<q", wr._mm, _SLOT_HDR.size, 99)
+    b2 = Board.for_writer(p, 8, n_ranks=1, timeout=0.5)
+    # attach rounded the crashed slot's lock word up to even (a blind
+    # `lock + 1` would publish odd forever and wedge every reader)
+    assert struct.unpack_from("<Q", b2._mm, _SLOT_OFF_LOCK)[0] == 2
+    rd = Board.for_reader(p, 8, n_ranks=1, timeout=0.5)
+    # the recovered-but-unpublished slot is dead (logical_seq 0), so the
+    # half-written 99 can never be served — entry 1 survives
+    assert rd.read(0, lockstep=False) == struct.pack("<q", 1)
+    # and the counter resumed from the published logical_seq: the next
+    # publish is entry 2, landing in the recovered slot with an advancing
+    # (even) seqlock
+    b2.write(struct.pack("<q", 2), readers=[0], lockstep=False)
+    assert rd.read(0, lockstep=False) == struct.pack("<q", 2)
+
+
+def test_mailbox_freerun_checksum_stress(tmp_path):
+    """One writer thread hammering a free-run Mailbox: every successful
+    read must decode a COMPLETE published entry (all 8 checksum words
+    agree and match the tag) and the latest-wins order is monotone."""
+    p = str(tmp_path / "edge.bin")
+    N = 1500
+    wr = Mailbox.for_writer(p, 64, timeout=10.0)
+    rd = Mailbox.for_reader(p, 64, timeout=10.0)
+
+    def pay(n):
+        return struct.pack("<Q", n) * 8
+
+    t = threading.Thread(target=lambda: [
+        wr.write(pay(n), tag=n, lockstep=False) for n in range(1, N + 1)])
+    t.start()
+    seen = 0
+    while seen < N:
+        got = rd.read(lockstep=False)
+        if got is None:
+            continue
+        buf, tag = got
+        words = struct.unpack("<8Q", buf)
+        assert len(set(words)) == 1 and words[0] == tag, (words, tag)
+        assert words[0] >= seen
+        seen = words[0]
+    t.join()
+
+
+def test_board_freerun_checksum_stress(tmp_path):
+    """One writer + two concurrent reader threads on a free-run Board:
+    no torn snapshot ever escapes the seqlock re-check."""
+    p = str(tmp_path / "board.bin")
+    N = 800
+    wr = Board.for_writer(p, 64, n_ranks=2, timeout=10.0)
+    errors = []
+
+    def pay(n):
+        return struct.pack("<Q", n) * 8
+
+    def reader(k):
+        rd = Board.for_reader(p, 64, n_ranks=2, timeout=10.0)
+        last = 0
+        try:
+            while last < N:
+                buf = rd.read(k, lockstep=False)
+                if buf is None:
+                    continue
+                words = struct.unpack("<8Q", buf)
+                assert len(set(words)) == 1, words
+                assert words[0] >= last
+                last = words[0]
+        except Exception as e:          # surface in the main thread
+            errors.append(e)
+
+    ts = [threading.Thread(target=reader, args=(k,)) for k in range(2)]
+    for t in ts:
+        t.start()
+    for n in range(1, N + 1):
+        wr.write(pay(n), readers=[0, 1], lockstep=False)
+    for t in ts:
+        t.join(timeout=60)
+    assert not errors, errors
+    assert not any(t.is_alive() for t in ts)
 
 
 def test_tree_wire_format_roundtrip_and_warmup_values():
