@@ -1,12 +1,22 @@
-"""Paper Figs. 8–10 — ensemble bias/variance study.
+"""Paper Figs. 8–10 — ensemble bias/variance study + throughput lane.
 
 Fig. 8: models with more parameters + more data converge to smaller
 residuals with smaller spread.  Fig. 9/10: larger ensemble size M reduces
 RMSE and spread.  Reduced scale: 3 model sizes x 2 batch sizes, M <= 12,
 shortened epochs (single-GPU-per-GAN = 'ensemble' sync mode with R
 independent ranks, which IS the paper's ensemble protocol).
+
+`throughput_lane` (ISSUE 7) is the measured many-seeds x problems series:
+for every registered inverse problem, M independently seeded GANs advance
+in ONE vmapped epoch step (ensemble sync mode — no communication), giving
+the solver's embarrassingly parallel analysis rate per workload.  Rows
+carry the standard `problem` / `schedule` / `backend` fields
+(docs/benchmarks.md) and the end-of-run ensemble residual, and ride in the
+`benchmarks.run` payload/headline.
 """
 from __future__ import annotations
+
+import time
 
 import numpy as np
 import jax
@@ -17,6 +27,7 @@ from repro.core.ensemble import ensemble_response, stack_generators
 from repro.core.residuals import normalized_residuals
 from repro.core.sync import SyncConfig
 from repro.core.workflow import WorkflowConfig
+from repro.problems import available, get_problem
 
 from .common import save_result
 
@@ -42,6 +53,53 @@ def train_ensemble(key, widths, n_param_samples, M, epochs, data):
         return state["gen"]
     finally:
         gan_mod.GEN_WIDTHS = orig
+
+
+def throughput_lane(problems=None, M=8, n_epochs=20, warmup=3, reps=2,
+                    quick=False, seed=0):
+    """Measured vmapped ensemble throughput, one row per registered problem.
+
+    Timing follows the repo convention (docs/benchmarks.md): warmup to
+    compile, then `reps` repetitions of `n_epochs` epochs, best (minimum)
+    per-epoch time.  Analysis rate = M * param-samples * events-per-sample
+    / epoch_s (Eq. 9 with N_epochs = 1).  The residual comes from the
+    final generator states via `ensemble_response`, so every throughput
+    row carries its accuracy evidence.
+    """
+    if quick:
+        M, n_epochs, reps = 4, 8, 1
+    rows = []
+    for name in (problems or available()):
+        prob = get_problem(name)
+        wcfg = WorkflowConfig(sync=SyncConfig(mode="ensemble"),
+                              n_param_samples=32, events_per_sample=25,
+                              problem=name)
+        data = prob.make_reference_data(jax.random.PRNGKey(42), 2000)
+        dpr = jnp.stack([data[:1000]] * M)
+        state = workflow.init_state(jax.random.PRNGKey(seed), M, wcfg,
+                                    same_generator=False)
+        fn = workflow.make_chunk_fn_vmap(1, M, wcfg, 1)
+        for _ in range(warmup):
+            state, m = fn(state, dpr)
+        jax.block_until_ready(m)
+        best = float("inf")
+        for _ in range(reps):
+            t0 = time.perf_counter()
+            for _ in range(n_epochs):
+                state, m = fn(state, dpr)
+            jax.block_until_ready(m)
+            best = min(best, (time.perf_counter() - t0) / n_epochs)
+        noise = jax.random.normal(jax.random.PRNGKey(7),
+                                  (256, gan.NOISE_DIM))
+        p_hat, _ = ensemble_response(state["gen"], noise)
+        res = float(prob.mean_abs_residual(p_hat))
+        rate = M * wcfg.n_param_samples * wcfg.events_per_sample / best
+        rows.append({"problem": name, "schedule": "ensemble",
+                     "backend": "vmap", "M": M, "epoch_s": best,
+                     "events_per_s": rate, "mean_abs_residual": res})
+        print(f"  {name:12s} M={M:2d} {best * 1e3:8.2f} ms/epoch  "
+              f"{rate:.3e} ev/s  |r|={res:.4f}", flush=True)
+    return rows
 
 
 def run(M=8, epochs=800, quick=False, seed=0):
@@ -80,7 +138,9 @@ def run(M=8, epochs=800, quick=False, seed=0):
                       "sigma_mean": float(np.mean(sigmas))})
         print(f"  M={m:2d} rmse {np.mean(rmses):.4f}±{np.std(rmses):.4f} "
               f"sigma {np.mean(sigmas):.4f}", flush=True)
-    payload = {"epochs": epochs, "M": M, "fig8": fig8, "fig10": fig10}
+    throughput = throughput_lane(quick=quick, seed=seed)
+    payload = {"epochs": epochs, "M": M, "fig8": fig8, "fig10": fig10,
+               "throughput": throughput}
     save_result("ensemble_study" + ("_quick" if quick else ""), payload)
     return payload
 

@@ -1,0 +1,168 @@
+"""ISSUE 7 evidence gate — precision x cadence x sync-mode sweep.
+
+Measures, on the vmap rank simulator, per-epoch wall time AND end-of-run
+accuracy for every lane of the bf16 + asymmetric-cadence throughput pass:
+
+    (payload_precision, disc_every) in {fp32, bf16} x {1, 2}
+        x schedule in {sync, overlap, adaptive}
+        x R in {4, 8, 16}
+
+Timing follows the repo's benchmark discipline (docs/benchmarks.md): warmup
+epochs to compile + warm caches, then `reps` back-to-back repetitions of
+`n_epochs` epochs recording the BEST (minimum) per-epoch time — scheduler
+noise on a shared host only ever adds time.
+
+Accuracy is the ACCURACY-EVIDENCE RULE made executable: a precision row is
+invalid without its residual.  Every lane trains the identical epoch budget
+and the row records the end-of-run ensemble residual computed from the
+final generator state directly (`ensemble_response` -> Eq. 6 residual) —
+NOT from the per-epoch metrics, whose skipped-half losses are NaN by design
+under cadence.  The headline acceptance: each bf16 residual within 2x of
+its fp32 counterpart (same R / schedule / cadence), and bf16+cadence at
+R=16 beating the fused fp32 bar.
+
+Writes BENCH_precision.json at the repo root (plus benchmarks/results/),
+one row per lane with the standard `problem` / `schedule` / `backend`
+fields so the series can be regressed like BENCH_weak_scaling.json.
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+import time
+
+import numpy as np
+
+from .common import save_result
+from .weak_scaling import GPUS_PER_NODE
+
+LANES = [("fp32", 1), ("fp32", 2), ("bf16", 1), ("bf16", 2)]
+SCHEDULES = ("sync", "overlap", "adaptive")
+
+
+def run(ranks=(4, 8, 16), schedules=SCHEDULES, h=25, n_epochs=12, warmup=4,
+        reps=2, problem="proxy1d", max_staleness=4, quick=False,
+        out_path=None, seed=0):
+    if quick:
+        ranks, schedules, n_epochs, reps = (4,), ("sync",), 6, 1
+
+    import jax
+    import jax.numpy as jnp
+
+    sys.path.insert(0, os.path.join(os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))), "src"))
+    from repro.core import gan, workflow
+    from repro.core.ensemble import ensemble_response
+    from repro.core.sync import SyncConfig
+    from repro.core.workflow import WorkflowConfig
+    from repro.problems import get_problem
+
+    prob = get_problem(problem)
+    data = prob.make_reference_data(jax.random.PRNGKey(42), 2000)
+    noise = jax.random.normal(jax.random.PRNGKey(7), (256, gan.NOISE_DIM))
+
+    rows = []
+    for R in ranks:
+        n_inner = min(R, GPUS_PER_NODE)
+        n_outer = max(R // n_inner, 1)
+        dpr = jnp.stack([data[:1000]] * R)
+        for schedule in schedules:
+            base = {}                      # (R, schedule) fp32 reference rows
+            for precision, disc_every in LANES:
+                sync_kw = dict(mode="rma_arar_arar", h=h, fuse_tensors=True,
+                               payload_precision=precision,
+                               overlap=schedule == "overlap",
+                               adaptive=schedule == "adaptive",
+                               staleness=max_staleness
+                               if schedule == "adaptive" else 1)
+                wcfg = WorkflowConfig(sync=SyncConfig(**sync_kw),
+                                      n_param_samples=32,
+                                      events_per_sample=25, problem=problem,
+                                      disc_every=disc_every)
+                state = workflow.init_state(jax.random.PRNGKey(seed), R,
+                                            wcfg)
+                fn = workflow.make_chunk_fn_vmap(n_outer, n_inner, wcfg, 1)
+                for _ in range(warmup):
+                    state, m = fn(state, dpr)
+                jax.block_until_ready(m)
+                best = float("inf")
+                for _ in range(reps):
+                    t0 = time.perf_counter()
+                    for _ in range(n_epochs):
+                        state, m = fn(state, dpr)
+                    jax.block_until_ready(m)
+                    best = min(best, (time.perf_counter() - t0) / n_epochs)
+                # end-of-run accuracy from the final generator state — the
+                # per-epoch metrics carry NaN skipped-half losses by design
+                # under cadence, so the residual must come from the params
+                p_hat, _ = ensemble_response(state["gen"], noise)
+                residual = float(prob.mean_abs_residual(p_hat))
+                row = {"ranks": R, "problem": problem, "schedule": schedule,
+                       "backend": "vmap", "precision": precision,
+                       "disc_every": disc_every, "epoch_s": best,
+                       "residual": residual}
+                if (precision, disc_every) == ("fp32", 1):
+                    base = row
+                else:
+                    row["speedup_vs_fp32"] = base["epoch_s"] / best
+                    row["residual_ratio_vs_fp32"] = (
+                        residual / base["residual"]
+                        if base["residual"] > 0 else float("inf"))
+                rows.append(row)
+                extra = ""
+                if "speedup_vs_fp32" in row:
+                    extra = (f"  {row['speedup_vs_fp32']:.2f}x fp32/de1, "
+                             f"res x{row['residual_ratio_vs_fp32']:.2f}")
+                print(f"  R={R:3d} {schedule:8s} {precision} de={disc_every}"
+                      f"  {best * 1e3:8.2f} ms/epoch  |r|={residual:.4f}"
+                      + extra, flush=True)
+
+    payload = {"benchmark": "precision_sweep", "mode": "rma_arar_arar",
+               "h": h, "n_epochs": n_epochs, "reps": reps, "warmup": warmup,
+               "problem": problem, "max_staleness": max_staleness,
+               "jax_platform": jax.default_backend(), "rows": rows}
+    save_result("precision_sweep" + ("_quick" if quick else ""), payload)
+    if not quick:
+        root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+        with open(out_path or os.path.join(root, "BENCH_precision.json"),
+                  "w") as f:
+            json.dump(payload, f, indent=1)
+    return payload
+
+
+def check(payload, bar_s=0.187):
+    """The acceptance predicate over a sweep payload: bf16 residuals within
+    2x their fp32 counterparts, and the bf16+cadence R=16 vmap lane under
+    `bar_s` (the fused fp32 epoch bar from BENCH_weak_scaling.json)."""
+    by_key = {(r["ranks"], r["schedule"], r["precision"], r["disc_every"]): r
+              for r in payload["rows"]}
+    ok = True
+    for (R, sched, prec, de), r in by_key.items():
+        if prec != "bf16":
+            continue
+        ref = by_key.get((R, sched, "fp32", de))
+        if ref is None or ref["residual"] <= 0:
+            continue
+        if r["residual"] > 2.0 * ref["residual"]:
+            print(f"FAIL residual: R={R} {sched} de={de} bf16 "
+                  f"{r['residual']:.4f} > 2x fp32 {ref['residual']:.4f}")
+            ok = False
+    fast = by_key.get((16, "sync", "bf16", 2))
+    if fast is not None and fast["epoch_s"] >= bar_s:
+        print(f"FAIL throughput: bf16+de2 R=16 {fast['epoch_s'] * 1e3:.1f} "
+              f"ms >= bar {bar_s * 1e3:.0f} ms")
+        ok = False
+    print("acceptance:", "OK" if ok else "FAILED")
+    return ok
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--problem", default="proxy1d")
+    a = ap.parse_args()
+    p = run(quick=a.quick, problem=a.problem)
+    if not a.quick:
+        check(p)

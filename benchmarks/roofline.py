@@ -1,5 +1,17 @@
 """§Roofline aggregation — reads the dry-run JSON records and renders the
-per-(arch x shape x mesh) roofline table (markdown + CSV)."""
+per-(arch x shape x mesh) roofline table (markdown + CSV).
+
+`--sync-modes` (ISSUE 7) instead emits the per-sync-mode bytes-moved /
+FLOPs report over the SAGIPS epoch: for every communication mode x wire
+precision the compiled shard_map epoch is costed via `launch/hlo_cost`
+(collective bytes per kind AND per wire dtype — bf16 halves the ring
+entries), and per cadence the steady-state epoch FLOPs are the
+frequency-weighted mix of the `rank_grads` branch specializations (the
+lowered `lax.cond` branches; costing the conditional whole would count
+both branches every epoch).  `python -m benchmarks.roofline --sync-modes`
+writes `results/precision_roofline.json` + `.md`; the committed
+before/after pair under `results/` is the evidence gate for the bf16 +
+cadence throughput pass."""
 from __future__ import annotations
 
 import glob
@@ -78,5 +90,127 @@ def main():
     print(f"\nwrote {csv_path} ({len(out_rows)} rows)")
 
 
+# ----------------------------------------------------------------------------
+# per-sync-mode bytes/FLOPs report (ISSUE 7 evidence gate)
+
+SYNC_COLS = ["mode", "schedule", "precision", "disc_every", "flops_epoch",
+             "collective_bytes", "cross_pod_bytes", "wire_dtypes",
+             "collective_ops"]
+
+
+def _cadence_flops(disc_every: int) -> float:
+    """Steady-state per-rank FLOPs of the gradient phase under `disc_every`:
+    a (1/de) mix of the full branch and the gen-only branch, costed from
+    their OWN lowerings (the branches of the epoch's lax.cond)."""
+    import sys as _sys
+    _sys.path.insert(0, os.path.join(os.path.dirname(
+        os.path.dirname(os.path.abspath(__file__))), "src"))
+    import jax
+    import jax.numpy as jnp
+    from repro.core import workflow
+    from repro.core.sync import SyncConfig
+    from repro.core.workflow import WorkflowConfig
+    from repro.launch import hlo_cost
+    from repro.problems import get_problem
+
+    wcfg = WorkflowConfig(sync=SyncConfig(mode="rma_arar_arar", h=2),
+                          n_param_samples=64, events_per_sample=25)
+    state = jax.eval_shape(
+        lambda k: workflow.init_rank_state(k, wcfg, workflow.make_schedule(
+            wcfg)), jax.random.PRNGKey(0))
+    obs = get_problem(wcfg.problem).obs_dim
+    data = jax.ShapeDtypeStruct((1000, obs), jnp.float32)
+
+    def phase_flops(update_disc):
+        fn = jax.jit(lambda s, d: workflow.rank_grads(
+            s, d, wcfg, update_disc=update_disc, update_gen=True))
+        txt = fn.lower(state, data).compile().as_text()
+        return hlo_cost.analyze(txt).flops
+
+    full, gen_only = phase_flops(True), phase_flops(False)
+    w = 1.0 / disc_every
+    return w * full + (1.0 - w) * gen_only
+
+
+def sync_mode_report(R=8, h=2, precisions=("fp32", "bf16"),
+                     disc_everys=(1, 2), out="precision_roofline"):
+    """Compiled-HLO cost rows per (mode x schedule x precision), plus the
+    cadence FLOPs mix — written to results/<out>.json and .md."""
+    from .weak_scaling import lower_epoch
+
+    grid = [("allreduce", "sync"), ("conv_arar", "sync"),
+            ("arar_arar", "sync"), ("dbtree", "sync"),
+            ("rma_arar_arar", "sync"), ("rma_arar_arar", "overlap"),
+            ("rma_arar_arar", "adaptive")]
+    ring = ("conv_arar", "arar_arar", "rma_arar_arar", "dbtree")
+    cadence_flops = {de: _cadence_flops(de) for de in disc_everys}
+    rows_out = []
+    for mode, schedule in grid:
+        for prec in precisions:
+            if prec != "fp32" and mode not in ring:
+                continue                 # bf16 is a ring-payload knob
+            rep = lower_epoch(R, mode, h, fuse=True, schedule=schedule,
+                              precision=prec)
+            # Wire dtypes come from the pre-optimization StableHLO: the XLA
+            # *CPU* backend's float-normalization widens bf16 collectives to
+            # f32 in the compiled module (convert / f32 permute / convert),
+            # so the compiled per-dtype split would misreport the ring entry
+            # the program ships on accelerator backends.
+            wire = rep.get("wire_bytes_by_dtype_stablehlo") or \
+                rep["collective_bytes_by_dtype"]
+            for de in disc_everys:
+                rows_out.append({
+                    "mode": mode, "schedule": schedule, "precision": prec,
+                    "disc_every": de,
+                    "flops_epoch": cadence_flops[de],
+                    "collective_bytes": rep["total_collective_bytes"],
+                    "cross_pod_bytes": rep["cross_pod_bytes"],
+                    "wire_dtypes": ",".join(
+                        f"{k}:{v:.0f}" for k, v in sorted(wire.items())),
+                    "collective_ops": sum(rep["collective_ops"].values()),
+                })
+            print(f"  {mode}/{schedule} {prec}: "
+                  f"{rep['total_collective_bytes']:.3e} B collective "
+                  f"({rows_out[-1]['wire_dtypes']})", flush=True)
+
+    payload = {"benchmark": "precision_roofline", "R": R, "h": h,
+               "per_rank": True,
+               "cadence_flops": {str(k): v
+                                 for k, v in cadence_flops.items()},
+               "rows": rows_out}
+    res_dir = os.path.join(os.path.dirname(__file__), "results")
+    os.makedirs(res_dir, exist_ok=True)
+    with open(os.path.join(res_dir, f"{out}.json"), "w") as f:
+        json.dump(payload, f, indent=1)
+    lines = ["| " + " | ".join(SYNC_COLS) + " |",
+             "|" + "|".join(["---"] * len(SYNC_COLS)) + "|"]
+    for r in rows_out:
+        lines.append("| " + " | ".join(fmt(r[c]) for c in SYNC_COLS) + " |")
+    lines.append("")
+    lines.append(
+        "`wire_dtypes` is the per-dtype static collective payload from the "
+        "pre-optimization StableHLO (bytes per occurrence); the XLA CPU "
+        "backend's float-normalization widens bf16 collectives to f32 in "
+        "the compiled module, so the compiled split would hide the halved "
+        "bf16 ring entry that accelerator backends keep. `flops_epoch` is "
+        "the steady-state rank_grads mix under `disc_every` (frequency-"
+        "weighted branch specializations).")
+    with open(os.path.join(res_dir, f"{out}.md"), "w") as f:
+        f.write("\n".join(lines) + "\n")
+    print(f"wrote results/{out}.json and .md ({len(rows_out)} rows)")
+    return payload
+
+
 if __name__ == "__main__":
-    main()
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--sync-modes", action="store_true",
+                    help="emit the per-sync-mode bytes/FLOPs report "
+                         "instead of the dry-run roofline table")
+    ap.add_argument("--ranks", type=int, default=8)
+    ap.add_argument("--out", default="precision_roofline")
+    a = ap.parse_args()
+    if a.sync_modes:
+        sync_mode_report(R=a.ranks, out=a.out)
+    else:
+        main()

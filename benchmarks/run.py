@@ -55,8 +55,10 @@ def _headline(name: str, payload: dict) -> str:
                 f"arar={m['arar']['mean_abs_residual']:.3f}")
     if name == "ensemble_study":
         f10 = payload["fig10"]
+        tp = " ".join(f"{r['problem']}:{r['events_per_s']:.2e}ev/s"
+                      for r in payload.get("throughput", []))
         return (f"rmse M={f10[0]['M']}:{f10[0]['rmse_mean']:.3f} -> "
-                f"M={f10[-1]['M']}:{f10[-1]['rmse_mean']:.3f}")
+                f"M={f10[-1]['M']}:{f10[-1]['rmse_mean']:.3f} {tp}")
     if name == "strong_scaling":
         cs = payload["curves"]
         return " ".join(f"R{k}:{v['mean_abs_residual'][-1]:.3f}"

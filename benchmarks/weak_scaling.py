@@ -56,6 +56,8 @@ R = int(sys.argv[1]); mode = sys.argv[2]; h = int(sys.argv[3])
 fuse = len(sys.argv) > 4 and sys.argv[4] == "fuse"
 problem = sys.argv[5] if len(sys.argv) > 5 else "proxy1d"
 schedule = sys.argv[6] if len(sys.argv) > 6 else "sync"
+precision = sys.argv[7] if len(sys.argv) > 7 else "fp32"
+disc_every = int(sys.argv[8]) if len(sys.argv) > 8 else 1
 n_outer = max(R // %d, 1); n_inner = min(R, %d)
 from repro.launch.mesh import make_mesh
 mesh = make_mesh((n_outer, n_inner), ("pod", "data"))
@@ -63,9 +65,10 @@ wcfg = WorkflowConfig(sync=SyncConfig(mode=mode, h=h, fuse_tensors=fuse,
                                       overlap=schedule == "overlap",
                                       adaptive=schedule == "adaptive",
                                       staleness=4 if schedule == "adaptive"
-                                      else 1),
+                                      else 1,
+                                      payload_precision=precision),
                       n_param_samples=64, events_per_sample=25,
-                      problem=problem)
+                      problem=problem, disc_every=disc_every)
 fn, shardings = workflow.make_epoch_fn_shard(mesh, wcfg)
 state = jax.eval_shape(lambda k: workflow.init_state(k, R, wcfg),
                        jax.random.PRNGKey(0))
@@ -76,15 +79,36 @@ state_in = jax.tree.map(lambda s: jax.ShapeDtypeStruct(s.shape, s.dtype,
 data_in = jax.ShapeDtypeStruct(data.shape, data.dtype, sharding=shardings)
 lowered = fn.lower(state_in, data_in)
 compiled = lowered.compile()
-rep = hlo_cost.analyze(compiled.as_text())
-print("RESULT " + json.dumps(rep.as_dict()))
+rep = hlo_cost.analyze(compiled.as_text()).as_dict()
+# Logical wire dtypes from the pre-optimization StableHLO: XLA's CPU
+# float-normalization pass widens bf16 collectives to f32 in the *compiled*
+# module (convert -> f32 collective-permute -> convert), an artifact of the
+# host backend that accelerator backends don't share — the StableHLO carries
+# the dtype the program actually ships on the ring.
+import re
+_ITEM = {"f64": 8, "f32": 4, "f16": 2, "bf16": 2,
+         "i64": 8, "ui64": 8, "i32": 4, "ui32": 4, "i8": 1, "ui8": 1, "i1": 1}
+wire = {}
+for m in re.finditer(r'"?stablehlo\.(?:collective_permute|all_reduce|'
+                     r'all_gather|reduce_scatter|all_to_all)"?[^\n]*?'
+                     r'->\s*tensor<([^>]+)>', lowered.as_text()):
+    *dims, dt = m.group(1).split("x")
+    n = 1
+    for d in dims:
+        n *= int(d)
+    if dt in _ITEM:
+        wire[dt] = wire.get(dt, 0) + n * _ITEM[dt]
+rep["wire_bytes_by_dtype_stablehlo"] = wire
+print("RESULT " + json.dumps(rep))
 """ % (GPUS_PER_NODE, GPUS_PER_NODE)
 
 
 def lower_epoch(R: int, mode: str, h: int, fuse: bool = False,
-                problem: str = "proxy1d", schedule: str = "sync") -> dict:
+                problem: str = "proxy1d", schedule: str = "sync",
+                precision: str = "fp32", disc_every: int = 1) -> dict:
     out = subprocess.run([sys.executable, "-c", _CHILD, str(R), mode, str(h),
-                          "fuse" if fuse else "nofuse", problem, schedule],
+                          "fuse" if fuse else "nofuse", problem, schedule,
+                          precision, str(disc_every)],
                          capture_output=True, text=True, timeout=600,
                          cwd=os.path.dirname(os.path.dirname(__file__)))
     for line in out.stdout.splitlines():

@@ -81,6 +81,19 @@ def main():
                          "k_max the controller may reach")
     ap.add_argument("--no-fuse", action="store_true",
                     help="disable the fused single-buffer ring payload")
+    ap.add_argument("--payload-precision", choices=("fp32", "bf16"),
+                    default="fp32",
+                    help="wire dtype of the exchanged gradient payload: "
+                         "bf16 halves ring/mailbox bytes while params and "
+                         "Adam state stay fp32 master copies (requires "
+                         "the fused payload and a ring mode)")
+    ap.add_argument("--disc-every", type=int, default=1,
+                    help="update the discriminator every Nth epoch; "
+                         "off-epochs skip its forward/backward at the "
+                         "HLO level (SPMD-uniform lax.cond)")
+    ap.add_argument("--gen-every", type=int, default=1,
+                    help="update the generator (and run the gradient "
+                         "exchange) every Nth epoch")
     ap.add_argument("--chunk", type=int, default=0,
                     help="epochs per jitted lax.scan chunk "
                          "(0: one chunk per report interval)")
@@ -117,9 +130,11 @@ def main():
                         staleness=args.max_staleness if adaptive
                         else args.staleness,
                         fuse_tensors=not args.no_fuse,
-                        overlap=overlap, adaptive=adaptive),
+                        overlap=overlap, adaptive=adaptive,
+                        payload_precision=args.payload_precision),
         n_param_samples=args.param_samples, events_per_sample=25,
-        gen_lr=2e-4, disc_lr=5e-4, problem=args.problem)
+        gen_lr=2e-4, disc_lr=5e-4, problem=args.problem,
+        disc_every=args.disc_every, gen_every=args.gen_every)
 
     data = problem.make_reference_data(jax.random.PRNGKey(99), args.events)
 
@@ -227,8 +242,14 @@ def main():
                 or done == args.epochs:
             p_hat, sigma = ensemble_response(state["gen"], noise)
             r = float(problem.mean_abs_residual(p_hat))
-            d_l = float(np.asarray(metrics["d_loss"][-1]).mean())
-            g_l = float(np.asarray(metrics["g_loss"][-1]).mean())
+            # under --disc-every/--gen-every, skipped epochs report NaN
+            # losses; show the cadence's most recent real update instead
+            d_l = float(np.nanmean(np.asarray(metrics["d_loss"])[-1])
+                        if not np.all(np.isnan(metrics["d_loss"][-1]))
+                        else np.nanmean(np.asarray(metrics["d_loss"])))
+            g_l = float(np.nanmean(np.asarray(metrics["g_loss"])[-1])
+                        if not np.all(np.isnan(metrics["g_loss"][-1]))
+                        else np.nanmean(np.asarray(metrics["g_loss"])))
             print(f"epoch {last:6d}  mean|r̂|={r:.4f}  d_loss={d_l:.3f}  "
                   f"g_loss={g_l:.3f}  ({time.time()-t0:.0f}s)", flush=True)
         # full resume-capable state every --ckpt-every completed epochs

@@ -22,6 +22,11 @@
 #                                    # — seconds, not minutes; also runs
 #                                    # inside the default full gate via
 #                                    # tests/test_analysis.py
+#   scripts/check.sh --precision     # precision lane: payload-precision +
+#                                    # cadence tests (bf16 wire vs fp32
+#                                    # master state, HLO cadence pins,
+#                                    # cross-backend equivalence) plus the
+#                                    # dtype-discipline linter checks
 #   scripts/check.sh --docs          # docs lane: dead links, stale file
 #                                    # references, package docstrings
 #                                    # (scripts/docs_lint.py)
@@ -50,6 +55,12 @@ if [[ "${1:-}" == "--analysis" ]]; then
     python scripts/repro_lint.py
     exec env PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
         python -m pytest -x -q tests/test_analysis.py "$@"
+fi
+if [[ "${1:-}" == "--precision" ]]; then
+    shift
+    python scripts/repro_lint.py
+    exec env PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
+        python -m pytest -x -q tests/test_precision.py "$@"
 fi
 if [[ "${1:-}" == "--docs" ]]; then
     shift

@@ -30,6 +30,15 @@ over `src/repro`.
      `_get`/`_put`; every header offset must be the derived
      `_MBX_OFF_*`/`_SLOT_OFF_*` constants (from `field_offsets`) so the
      file layout has one source of truth.
+  6. Payload dtype discipline — the wire dtype of the fused ring payload
+     flows from `SyncConfig.payload_precision` through
+     `payload_dtype_of` into `FusionSpec.build` and NOWHERE else: inside
+     `core/sync.py` function bodies (outside the two blessed definition
+     sites) no `astype`/array-constructor call may name a float dtype
+     literal (a silent fp32 upcast between pack and deposit would undo
+     the bf16 ring), and every `FusionSpec.build(...)` call site in
+     `src/repro` must pass the `payload_dtype=` keyword rather than
+     re-deriving the wire dtype.
 
 Exit status is the number of problems found (0 == clean), matching
 `scripts/docs_lint.py` so the lanes compose.
@@ -319,6 +328,70 @@ def check_struct_offsets(rel: str, tree: ast.AST, problems: List[str]):
 
 
 # ---------------------------------------------------------------------------
+# 6. Payload dtype discipline (core/sync.py + FusionSpec.build call sites)
+
+SYNC = "core/sync.py"
+_FLOAT_DTYPES = {"float32", "float64", "float16", "bfloat16"}
+# blessed definition sites: the precision->dtype registry and the
+# historical-derivation fallback inside FusionSpec.build itself
+_DTYPE_DEF_SITES = {"payload_dtype_of", "build"}
+_ARRAY_MAKERS = {"zeros", "ones", "full", "empty", "asarray", "array"}
+
+
+def _float_dtype_literal(node) -> Optional[str]:
+    """Name of a hard-coded float dtype if `node` is one: the string
+    constant "float32", or an attribute literal jnp/np.float32 etc."""
+    if isinstance(node, ast.Constant) and node.value in _FLOAT_DTYPES:
+        return node.value
+    c = _chain(node)
+    if c and c[0] in ("jnp", "np", "numpy", "jax") and c[1] \
+            and c[1][-1] in _FLOAT_DTYPES:
+        return c[1][-1]
+    return None
+
+
+def check_payload_dtype(rel: str, tree: ast.AST, problems: List[str]):
+    for fn in ast.walk(tree):
+        if not isinstance(fn, ast.FunctionDef) \
+                or fn.name in _DTYPE_DEF_SITES:
+            continue
+        for call in ast.walk(fn):
+            if not isinstance(call, ast.Call):
+                continue
+            lit = None
+            if isinstance(call.func, ast.Attribute) \
+                    and call.func.attr == "astype" and call.args:
+                lit = _float_dtype_literal(call.args[0])
+            else:
+                c = _chain(call.func)
+                if c and c[1] and c[1][-1] in _ARRAY_MAKERS:
+                    for a in list(call.args) + \
+                            [k.value for k in call.keywords]:
+                        lit = lit or _float_dtype_literal(a)
+            if lit:
+                problems.append(
+                    f"{rel}:{call.lineno}: hard-coded float dtype `{lit}` "
+                    f"on the payload path — thread payload_dtype from "
+                    f"SyncConfig (or use CTRL_DTYPE)")
+
+
+def check_build_kwarg(rel: str, tree: ast.AST, problems: List[str]):
+    for call in ast.walk(tree):
+        if not isinstance(call, ast.Call):
+            continue
+        c = _chain(call.func)
+        if not (c and c[1] and c[1][-1] == "build"
+                and "FusionSpec" in (c[0],) + tuple(c[1][:-1])):
+            continue
+        if not any(kw.arg == "payload_dtype" for kw in call.keywords):
+            problems.append(
+                f"{rel}:{call.lineno}: FusionSpec.build(...) without the "
+                f"payload_dtype= keyword — the wire dtype must flow from "
+                f"SyncConfig.payload_precision, not be re-derived at the "
+                f"call site")
+
+
+# ---------------------------------------------------------------------------
 
 
 def lint_sources(sources: Dict[str, str]) -> List[str]:
@@ -339,6 +412,9 @@ def lint_sources(sources: Dict[str, str]) -> List[str]:
             check_traced_branch(rel, tree, problems)
         if rel == MAILBOX:
             check_struct_offsets(rel, tree, problems)
+        if rel == SYNC:
+            check_payload_dtype(rel, tree, problems)
+        check_build_kwarg(rel, tree, problems)
     return problems
 
 

@@ -29,11 +29,11 @@ from .explorer import InvariantViolation, Process, Result, Step, explore
 from .faults import Gate, InterleavingDriver
 from .model import (ANCHORS, barrier_model, board_model,
                     crashed_board_state, line_of, mailbox_freerun_model,
-                    mailbox_lockstep_model)
+                    mailbox_lockstep_model, window_layout_model)
 
 __all__ = [
     "ANCHORS", "Gate", "InterleavingDriver", "InvariantViolation",
     "Process", "Result", "Step", "barrier_model", "board_model",
     "crashed_board_state", "explore", "line_of", "mailbox_freerun_model",
-    "mailbox_lockstep_model",
+    "mailbox_lockstep_model", "window_layout_model",
 ]

@@ -86,6 +86,12 @@ ANCHORS = {
     "board.read.ack": "_U64.size * reader_rank, n)",
     "barrier.bump": "_U64.pack_into(self._mm, _U64.size * self.rank, n)",
     "barrier.wait": "_U64.unpack_from(self._mm, _U64.size * r)[0] >= n",
+    # window byte-layout derivations (ISSUE 7): sizes flow from the
+    # payload dtype's itemsize, never from an assumed 4-byte word
+    "layout.itemsize": "return int(n_elems) * int(np.dtype(dtype).itemsize)",
+    "layout.mbx_size": "self._size = _MBX_HDR.size + nbytes",
+    "layout.board_stride": "self._stride = _SLOT_HDR.size + nbytes",
+    "layout.board_size": "self._size = self._acks_off + _U64.size * n_ranks",
 }
 
 
@@ -430,6 +436,35 @@ def crashed_board_state(published_entries: int = 1) -> dict:
     if n > 1:
         raise ValueError("model pre-state supports published_entries=1")
     return state
+
+
+# ---------------------------------------------------------------------------
+# Window byte layout (ISSUE 7: dtype-sized payloads)
+
+
+def window_layout_model(n_elems: int, itemsize: int, n_ranks: int = 2):
+    """Independent derivation of the mmap window byte layout for a flat
+    payload of `n_elems` scalars of `itemsize` bytes each.
+
+    The real `Mailbox`/`Board` size their windows from the serialized
+    payload length, so a bf16 payload (itemsize 2) halves the data
+    region relative to fp32 (itemsize 4) while the fixed u64 headers
+    stay put.  `tests/test_analysis.py` pins the real constructors
+    against this model at several itemsizes, which is how the checker
+    covers the RESIZED windows: the step anchors above model control
+    words only, and this model asserts the payload region boundaries
+    those steps straddle are wherever the dtype puts them."""
+    nbytes = n_elems * itemsize
+    mbx_size = mailbox._MBX_HDR.size + nbytes
+    board_stride = mailbox._SLOT_HDR.size + nbytes
+    board_acks_off = 2 * board_stride
+    return {
+        "nbytes": nbytes,
+        "mailbox_size": mbx_size,
+        "board_stride": board_stride,
+        "board_acks_off": board_acks_off,
+        "board_size": board_acks_off + mailbox._U64.size * n_ranks,
+    }
 
 
 # ---------------------------------------------------------------------------

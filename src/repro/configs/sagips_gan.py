@@ -37,3 +37,16 @@ def for_problem(problem: str, base: WorkflowConfig = REDUCED) -> WorkflowConfig:
     from ..problems import get_problem
     get_problem(problem)                     # fail fast on unknown names
     return dataclasses.replace(base, problem=problem)
+
+
+def throughput(base: WorkflowConfig = REDUCED,
+               disc_every: int = 2) -> WorkflowConfig:
+    """ISSUE 7 throughput variant of a preset: bf16 wire payloads against
+    fp32 master state, plus a discriminator update every `disc_every`
+    epochs.  Accuracy evidence for these settings lives in
+    `BENCH_precision.json` (every bf16 row records its final residual
+    next to the fp32 counterpart)."""
+    return dataclasses.replace(
+        base,
+        sync=dataclasses.replace(base.sync, payload_precision="bf16"),
+        disc_every=disc_every)

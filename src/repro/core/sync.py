@@ -105,6 +105,19 @@ semantics untouched; staleness stays k-bounded (inner: k, outer: 1 on
 top of the h-period).  overlap=False is bitwise-identical to the
 pre-overlap engine (golden proxy1d test).
 
+Payload precision (`SyncConfig.payload_precision`, ISSUE 7): the fused
+flat payload's WIRE dtype — 'fp32' (default, bitwise-pinned) or 'bf16'
+(ParaGAN-style half-width ring traffic).  The cast happens exactly once
+on each side: `FusionSpec.flatten` packs to `payload_dtype`, and
+`FusionSpec.unflatten` casts back to the destination tree's leaf dtype —
+fp32 when scattering into the gradient/master state, the wire dtype when
+scattering into a mailbox (so the depth-k RMA mailbox, the overlap
+`outer_mailbox` and the adaptive [k_max, D] buffer all STORE bf16, and
+one-sided backends ship half the bytes).  Combines run in the payload
+dtype; the Adam update and optimizer state stay fp32 ("fp32 master").
+bf16 requires `fuse_tensors=True` and a ring mode — the knob names what
+rides the ring, nothing else.
+
 Per §V-C only *weight* gradients ride the ring; bias gradients stay local
 (pass `mask` from `gan.weight_mask` — leaves where mask=False skip sync).
 Per Algorithm 1 the combine is a *sum* (g_i <- g_i + g_{i-1}); `combine=
@@ -126,6 +139,31 @@ MODES = ("ensemble", "allreduce", "conv_arar", "arar_arar", "rma_arar_arar",
 
 # modes whose exchange rides the ring and therefore benefits from fusion
 RING_MODES = ("conv_arar", "arar_arar", "rma_arar_arar", "dbtree")
+
+# exchanged-payload precisions (ParaGAN-style throughput knob, ISSUE 7):
+# the wire/mailbox dtype of the fused flat ring payload.  Master params and
+# optimizer state stay fp32 regardless — `FusionSpec.unflatten` casts back
+# to the destination tree's leaf dtype at scatter time.
+PAYLOAD_PRECISIONS = ("fp32", "bf16")
+
+# controller state (skew EMA) dtype — NOT the payload path; kept as a
+# module constant so `scripts/repro_lint.py`'s dtype-discipline check can
+# insist that no function on the payload path hard-codes a float dtype
+CTRL_DTYPE = jnp.float32
+
+
+def payload_dtype_of(precision: str):
+    """The jnp dtype a `SyncConfig.payload_precision` value names.  This is
+    the ONE place the precision string becomes a dtype: `FusionSpec.build`
+    callers thread the result in, so the payload dtype always flows from
+    the config (enforced by the repro_lint dtype-discipline check)."""
+    if precision == "fp32":
+        return jnp.dtype("float32")
+    if precision == "bf16":
+        return jnp.dtype("bfloat16")
+    raise ValueError(
+        f"unknown payload_precision {precision!r}; expected one of "
+        f"{PAYLOAD_PRECISIONS}")
 
 # modes with a distinct inner/outer ring split — the only ones whose
 # pod-boundary segment can be overlapped (SyncConfig.overlap)
@@ -149,10 +187,26 @@ class SyncConfig:
     #                                effective read depth k_eff in
     #                                [1, staleness] from measured per-rank
     #                                completion skew (deposit tags)
+    payload_precision: str = "fp32"  # wire dtype of the fused ring payload
+    #                                ('fp32' | 'bf16'); master params and
+    #                                optimizer state stay fp32 either way
 
     def __post_init__(self):
         if self.mode not in MODES:
             raise ValueError(f"unknown sync mode {self.mode!r}")
+        if self.payload_precision not in PAYLOAD_PRECISIONS:
+            raise ValueError(
+                f"unknown payload_precision {self.payload_precision!r}; "
+                f"expected one of {PAYLOAD_PRECISIONS}")
+        if self.payload_precision != "fp32" and not self.fuse_tensors:
+            raise ValueError(
+                "payload_precision applies to the FUSED flat ring payload "
+                "(pack at flatten, unpack at scatter); set fuse_tensors=True")
+        if self.payload_precision != "fp32" and self.mode not in RING_MODES:
+            raise ValueError(
+                "payload_precision only changes what rides the ring; mode="
+                f"{self.mode!r} has no fused ring payload (ring modes: "
+                f"{RING_MODES})")
         if self.staleness < 1:
             raise ValueError(f"staleness must be >= 1, got {self.staleness}")
         if self.staleness > 1 and self.mode != "rma_arar_arar":
@@ -209,9 +263,16 @@ class FusionSpec:
     payload_dtype: Any = jnp.float32   # dtype of the concatenated payload
 
     @classmethod
-    def build(cls, example, mask) -> "FusionSpec":
+    def build(cls, example, mask, payload_dtype=None) -> "FusionSpec":
         """`example` is a per-rank pytree (arrays or ShapeDtypeStructs,
-        no leading rank axis); `mask` a matching bool pytree."""
+        no leading rank axis); `mask` a matching bool pytree.
+
+        `payload_dtype` sets the WIRE dtype of the flat payload (what the
+        ring actually moves — `payload_dtype_of(cfg.payload_precision)`);
+        None derives it from the masked leaves (historical fp32 behavior).
+        The per-leaf slot dtypes always record the MASTER dtypes, so
+        `unflatten` can restore the fp32 state regardless of what was
+        shipped."""
         treedef = jax.tree.structure(example)
         slots, off = [], 0
         for m, g in zip(jax.tree.leaves(mask), jax.tree.leaves(example)):
@@ -220,10 +281,11 @@ class FusionSpec:
                                    off if m else -1, g.dtype))
             if m:
                 off += n
-        masked_dtypes = [s.dtype for s in slots if s.masked]
-        dtype = jnp.result_type(*masked_dtypes) if masked_dtypes \
-            else jnp.dtype(jnp.float32)
-        return cls(treedef, tuple(slots), off, dtype)
+        if payload_dtype is None:
+            masked_dtypes = [s.dtype for s in slots if s.masked]
+            payload_dtype = jnp.result_type(*masked_dtypes) if masked_dtypes \
+                else jnp.dtype("float32")
+        return cls(treedef, tuple(slots), off, jnp.dtype(payload_dtype))
 
     def zero_payload(self, n_ranks: Optional[int] = None):
         """Zero flat ring payload in this spec's layout: [D] per rank, or
@@ -233,23 +295,29 @@ class FusionSpec:
         return jnp.zeros(shape, self.payload_dtype)
 
     def flatten(self, tree, stacked: bool):
-        """Concatenate mask-selected leaves into the flat ring payload.
-        stacked=True keeps the leading simulated-rank axis intact."""
+        """Concatenate mask-selected leaves into the flat ring payload,
+        PACKED to `payload_dtype` (the one cast on the pack side — a no-op
+        when the payload precision is the master fp32).  stacked=True keeps
+        the leading simulated-rank axis intact."""
         parts = [
             (g.reshape(g.shape[0], -1) if stacked else g.reshape(-1))
             for s, g in zip(self.slots, jax.tree.leaves(tree)) if s.masked]
-        return jnp.concatenate(parts, axis=1 if stacked else 0)
+        return jnp.concatenate(parts, axis=1 if stacked else 0) \
+            .astype(self.payload_dtype)
 
     def unflatten(self, vec, tree, stacked: bool):
         """Scatter the exchanged payload back; unmasked leaves pass through
-        from `tree` untouched."""
+        from `tree` untouched.  Masked leaves are cast to the DESTINATION
+        tree's leaf dtype: scattering into the gradient tree restores the
+        fp32 master precision, scattering into a payload-precision mailbox
+        keeps the wire dtype (no silent upcast between pack and deposit)."""
         out = []
         for s, g in zip(self.slots, jax.tree.leaves(tree)):
             if s.masked:
                 sl = vec[:, s.offset:s.offset + s.size] if stacked \
                     else vec[s.offset:s.offset + s.size]
                 shape = (g.shape[0],) + s.shape if stacked else s.shape
-                out.append(sl.reshape(shape).astype(s.dtype))
+                out.append(sl.reshape(shape).astype(g.dtype))
             else:
                 out.append(g)
         return jax.tree.unflatten(self.treedef, out)
@@ -372,7 +440,9 @@ def sync_gradients(comm: Comm, cfg: SyncConfig, grads, mailbox, epoch,
         example = jax.tree.map(
             lambda x: jax.ShapeDtypeStruct(x.shape[1:], x.dtype)
             if stacked else jax.ShapeDtypeStruct(x.shape, x.dtype), grads)
-        spec = FusionSpec.build(example, mask)
+        spec = FusionSpec.build(
+            example, mask,
+            payload_dtype=payload_dtype_of(cfg.payload_precision))
     new_outer = outer_mailbox
     if fuse and spec.total > 0:     # all-False mask: nothing rides the ring
         # paper §VII: one fused ring payload instead of one transfer per
@@ -519,6 +589,11 @@ class StaticSchedule(SyncSchedule):
 
     SyncState = {"mailbox": <grads-shaped tree, depth-k axis when
     staleness > 1>, "outer_mailbox": <flat [D] payload>}.
+
+    Mask-selected mailbox leaves are stored in the spec's PAYLOAD dtype
+    (what the ring actually deposited — bf16 under
+    `payload_precision='bf16'`, the historical fp32 otherwise); unmasked
+    leaves never ride the ring and keep their master dtype.
     """
 
     @property
@@ -527,6 +602,10 @@ class StaticSchedule(SyncSchedule):
 
     def init_state(self, n_ranks: Optional[int] = None):
         example = self._grads_example(n_ranks)
+        if self.mask is not None:
+            example = jax.tree.map(
+                lambda m, x: x.astype(self.spec.payload_dtype) if m else x,
+                self.mask, example)
         return {
             "mailbox": init_mailbox(example, staleness=self.cfg.staleness,
                                     stacked=n_ranks is not None),
@@ -580,7 +659,7 @@ def adaptive_controller_step(ctrl, observed_skew, k_max: int,
     ema = (1.0 - alpha) * ctrl["skew_ema"] + alpha * observed_skew
     k_cur = jnp.clip(ctrl["k_eff"], 1, k_max).astype(jnp.int32)
     implied = 1.0 + ema
-    move = jnp.abs(implied - k_cur.astype(jnp.float32)) > 0.5 + deadband
+    move = jnp.abs(implied - k_cur.astype(CTRL_DTYPE)) > 0.5 + deadband
     k_new = jnp.where(move, adaptive_k_eff(ema, k_max), k_cur)
     return {"skew_ema": ema, "k_eff": k_new.astype(jnp.int32)}
 
@@ -642,7 +721,7 @@ class AdaptiveSchedule(SyncSchedule):
             },
             "outer_mailbox": self.spec.zero_payload(n_ranks),
             "ctrl": {
-                "skew_ema": jnp.zeros(lead, jnp.float32),
+                "skew_ema": jnp.zeros(lead, CTRL_DTYPE),
                 "k_eff": jnp.ones(lead, jnp.int32),
                 "shipped_for": jnp.full(lead, -1, jnp.int32),
             },
@@ -681,8 +760,8 @@ class AdaptiveSchedule(SyncSchedule):
         # in the pmean.  Lock-step runs observe exactly 0 either way, so
         # the bitwise degeneration to depth-1 rma is untouched.
         observed = jnp.where(tag_read >= 0,
-                             (epoch - tag_read - k_eff).astype(jnp.float32),
-                             jnp.zeros_like(tag_read, jnp.float32))
+                             (epoch - tag_read - k_eff).astype(CTRL_DTYPE),
+                             jnp.zeros_like(tag_read, CTRL_DTYPE))
         observed = jnp.maximum(observed, 0.0)
         skew = comm.pmean_all(observed)          # uniform across ranks
         new_ctrl = adaptive_controller_step(

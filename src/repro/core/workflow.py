@@ -13,6 +13,15 @@ Per epoch, each rank (§IV-B):
   6. applies its Adam update (generator copies may drift — the ensemble
      response over ranks is the estimator, §VI-A).
 
+Asymmetric update cadence (`WorkflowConfig.disc_every` / `gen_every`,
+ISSUE 7): step 3 runs only when `epoch % disc_every == 0`, steps 4–6 only
+when `epoch % gen_every == 0`.  Off-epochs ride a SPMD-uniform `lax.cond`
+(predicate derived from the rank-uniform epoch counter), so the skipped
+forward/backward genuinely disappears from the executed HLO branch — the
+dominant per-epoch matmuls (the discriminator's real+fake batches) can be
+paid every other epoch.  The default (1, 1) is the paper's every-epoch
+schedule, bitwise-pinned.
+
 Three drivers share the per-rank functions:
   * `train_vmap`     — R simulated ranks on one device (convergence studies)
   * `make_epoch_fn_shard` — shard_map over a mesh (production / dry-run)
@@ -64,6 +73,21 @@ class WorkflowConfig:
     sampler_impl: str = "jnp"                           # 'jnp' | 'pallas'
     sampler_interpret: Optional[bool] = None            # None: auto per backend
     problem: str = "proxy1d"                            # registry key
+    disc_every: int = 1            # discriminator update cadence: epochs
+    #                                where epoch % disc_every != 0 skip the
+    #                                disc forward/backward AT THE HLO LEVEL
+    #                                (SPMD-uniform lax.cond, like the
+    #                                overlap ship gate)
+    gen_every: int = 1             # generator cadence: off-epochs skip gen
+    #                                grads, the ring exchange AND the Adam
+    #                                apply (disc-only epochs)
+
+    def __post_init__(self):
+        if self.disc_every < 1 or self.gen_every < 1:
+            raise ValueError(
+                "disc_every/gen_every are update cadences (update when "
+                f"epoch %% N == 0) and must be >= 1; got "
+                f"disc_every={self.disc_every}, gen_every={self.gen_every}")
 
     @property
     def disc_batch(self) -> int:
@@ -166,38 +190,69 @@ def _bootstrap(rng, data, n_draw: int):
     return jnp.take(data, idx, axis=0)
 
 
-def rank_grads(state, data_local, wcfg: WorkflowConfig):
-    """Steps 1–4 for one rank.  Returns (partial_state, gen_grads, metrics)."""
+def rank_grads(state, data_local, wcfg: WorkflowConfig,
+               update_disc: bool = True, update_gen: bool = True):
+    """Steps 1–4 for one rank.  Returns (partial_state, gen_grads, metrics).
+
+    `update_disc` / `update_gen` are STATIC (Python-bool) cadence flags:
+    each combination traces its own branch, so a skipped half genuinely
+    disappears from that branch's HLO (the epoch bodies hang the branches
+    on a SPMD-uniform `lax.cond` over the epoch counter — see
+    `_epoch_body_vmap`).  The rng stream advances identically regardless
+    of the flags, so cadenced runs stay comparable draw-for-draw with the
+    every-epoch schedule.  Skipped halves report NaN losses and (when no
+    forward ran at all) NaN parameter metrics; `g_grads` is a zero tree
+    when the generator is skipped (callers on the cadence path never
+    exchange or apply it)."""
     from .. import problems as problems_lib
     prob = wcfg.problem_obj
     rng, k_boot, k_gen = jax.random.split(state["rng"], 3)
-    # identical real/fake counts (§V-A): draw the synthetic batch size
-    real = _bootstrap(k_boot, data_local, wcfg.disc_batch)
+    pred_params = None
 
-    fake, pred_params = problems_lib.synthetic_events(
-        prob, state["gen"], k_gen, wcfg.n_param_samples,
-        wcfg.events_per_sample,
-        impl=wcfg.sampler_impl, interpret=wcfg.sampler_interpret)
+    if update_disc:
+        # identical real/fake counts (§V-A): draw the synthetic batch size
+        real = _bootstrap(k_boot, data_local, wcfg.disc_batch)
 
-    # --- discriminator update (local, immediate — §IV-B) ---------------------
-    d_loss, d_grads = jax.value_and_grad(gan.disc_loss)(
-        state["disc"], real, jax.lax.stop_gradient(fake))
-    d_upd, disc_opt = adam(wcfg.disc_lr).update(d_grads, state["disc_opt"])
-    disc = jax.tree.map(lambda p, u: p + u, state["disc"], d_upd)
-
-    # --- generator gradients through forward model + (old) discriminator -----
-    def g_objective(gen_p):
-        fake_ev, _ = problems_lib.synthetic_events(
-            prob, gen_p, k_gen, wcfg.n_param_samples, wcfg.events_per_sample,
+        fake, pred_params = problems_lib.synthetic_events(
+            prob, state["gen"], k_gen, wcfg.n_param_samples,
+            wcfg.events_per_sample,
             impl=wcfg.sampler_impl, interpret=wcfg.sampler_interpret)
-        return gan.gen_loss(state["disc"], fake_ev)
 
-    g_loss, g_grads = jax.value_and_grad(g_objective)(state["gen"])
+        # --- discriminator update (local, immediate — §IV-B) -----------------
+        d_loss, d_grads = jax.value_and_grad(gan.disc_loss)(
+            state["disc"], real, jax.lax.stop_gradient(fake))
+        d_upd, disc_opt = adam(wcfg.disc_lr).update(d_grads,
+                                                    state["disc_opt"])
+        disc = jax.tree.map(lambda p, u: p + u, state["disc"], d_upd)
+    else:
+        d_loss = jnp.full((), jnp.nan, jnp.float32)
+        disc, disc_opt = state["disc"], state["disc_opt"]
 
+    if update_gen:
+        # --- generator gradients through forward model + (old) discriminator -
+        def g_objective(gen_p):
+            fake_ev, pred = problems_lib.synthetic_events(
+                prob, gen_p, k_gen, wcfg.n_param_samples,
+                wcfg.events_per_sample,
+                impl=wcfg.sampler_impl, interpret=wcfg.sampler_interpret)
+            return gan.gen_loss(state["disc"], fake_ev), pred
+
+        (g_loss, pred_aux), g_grads = jax.value_and_grad(
+            g_objective, has_aux=True)(state["gen"])
+        if pred_params is None:     # disc-off epoch: metrics from the aux
+            pred_params = pred_aux
+    else:
+        g_loss = jnp.full((), jnp.nan, jnp.float32)
+        g_grads = jax.tree.map(jnp.zeros_like, state["gen"])
+
+    if pred_params is None:         # neither half sampled this epoch
+        pred_mean = jnp.full((prob.n_params,), jnp.nan, jnp.float32)
+    else:
+        pred_mean = pred_params.mean(axis=0)
     metrics = {
         "d_loss": d_loss, "g_loss": g_loss,
-        "pred_params": pred_params.mean(axis=0),
-        "residuals": prob.residuals(pred_params.mean(axis=0)),
+        "pred_params": pred_mean,
+        "residuals": prob.residuals(pred_mean),
     }
     new_state = dict(state, disc=disc, disc_opt=disc_opt, rng=rng)
     return new_state, g_grads, metrics
@@ -231,19 +286,67 @@ def make_schedule(wcfg: WorkflowConfig) -> sync_lib.SyncSchedule:
     problem-agnostic."""
     example = _gen_example(wcfg)
     mask = gan.weight_mask(example)
-    spec = sync_lib.FusionSpec.build(example, mask)
+    spec = sync_lib.FusionSpec.build(
+        example, mask,
+        payload_dtype=sync_lib.payload_dtype_of(wcfg.sync.payload_precision))
     return sync_lib.make_schedule(wcfg.sync, mask, spec)
 
 
 def _epoch_body_vmap(comm, schedule, wcfg: WorkflowConfig):
+    """One stacked-[R] epoch.  With the default every-epoch cadence this is
+    exactly the historical body (bitwise-pinned).  With `disc_every` /
+    `gen_every` > 1 the skipped halves ride a `lax.cond` OUTSIDE the vmap:
+    the predicate is derived from the (rank-uniform) epoch counter, so the
+    branch is SPMD-uniform and lowers to a real HLO conditional — under
+    vmap a batched predicate would silently become a select that computes
+    both halves (the same trick as the overlap ship gate, PR 3).  A
+    generator off-epoch skips gradients, ring exchange AND Adam apply; the
+    epoch counter still advances."""
+    de, ge = wcfg.disc_every, wcfg.gen_every
+
+    def grads_phase(update_disc, update_gen):
+        def f(state, data_per_rank):
+            return jax.vmap(lambda s, d: rank_grads(
+                s, d, wcfg, update_disc=update_disc,
+                update_gen=update_gen))(state, data_per_rank)
+        return f
+
     def epoch(state, data_per_rank):
-        new_state, g_grads, metrics = jax.vmap(
-            lambda s, d: rank_grads(s, d, wcfg))(state, data_per_rank)
-        epoch_idx = new_state["epoch"][0]
-        synced, new_sync = schedule.exchange(
-            comm, g_grads, new_state["sync"], epoch_idx)
-        out = jax.vmap(lambda s, g, ns: rank_apply(s, g, ns, wcfg))(
-            new_state, synced, new_sync)
+        epoch_idx = state["epoch"][0]
+        if de == 1 and ge == 1:
+            new_state, g_grads, metrics = grads_phase(True, True)(
+                state, data_per_rank)
+        elif ge == 1:
+            new_state, g_grads, metrics = jax.lax.cond(
+                (epoch_idx % de) == 0,
+                grads_phase(True, True), grads_phase(False, True),
+                state, data_per_rank)
+        elif de == 1:
+            new_state, g_grads, metrics = jax.lax.cond(
+                (epoch_idx % ge) == 0,
+                grads_phase(True, True), grads_phase(True, False),
+                state, data_per_rank)
+        else:
+            idx = ((epoch_idx % de) == 0).astype(jnp.int32) * 2 \
+                + ((epoch_idx % ge) == 0).astype(jnp.int32)
+            new_state, g_grads, metrics = jax.lax.switch(
+                idx, [grads_phase(False, False), grads_phase(False, True),
+                      grads_phase(True, False), grads_phase(True, True)],
+                state, data_per_rank)
+
+        def gen_segment(ns, gg):
+            synced, new_sync = schedule.exchange(
+                comm, gg, ns["sync"], epoch_idx)
+            return jax.vmap(lambda s, g, n2: rank_apply(s, g, n2, wcfg))(
+                ns, synced, new_sync)
+
+        if ge == 1:
+            out = gen_segment(new_state, g_grads)
+        else:
+            out = jax.lax.cond(
+                (epoch_idx % ge) == 0, gen_segment,
+                lambda ns, gg: dict(ns, epoch=ns["epoch"] + 1),
+                new_state, g_grads)
         return out, metrics
     return epoch
 
@@ -299,13 +402,54 @@ def make_epoch_fn_shard(mesh, wcfg: WorkflowConfig,
     comm = ShardComm(n_outer, n_inner, outer_axis, inner_axis)
     schedule = make_schedule(wcfg)
 
+    de, ge = wcfg.disc_every, wcfg.gen_every
+
+    def grads_phase(update_disc, update_gen):
+        def f(state1, data1):
+            return rank_grads(state1, data1, wcfg, update_disc=update_disc,
+                              update_gen=update_gen)
+        return f
+
     def epoch(state, data_local):
         # leading axis has local size 1 inside shard_map
         state1 = jax.tree.map(lambda x: x[0], state)
-        new_state, g_grads, metrics = rank_grads(state1, data_local[0], wcfg)
-        synced, new_sync = schedule.exchange(
-            comm, g_grads, new_state["sync"], new_state["epoch"])
-        out = rank_apply(new_state, synced, new_sync, wcfg)
+        epoch_idx = state1["epoch"]
+        # cadence gates: the epoch counter is identical on every rank, so
+        # the cond is SPMD-uniform (a real branch, not a select) — the same
+        # contract as the overlap ship gate
+        if de == 1 and ge == 1:
+            new_state, g_grads, metrics = grads_phase(True, True)(
+                state1, data_local[0])
+        elif ge == 1:
+            new_state, g_grads, metrics = jax.lax.cond(
+                (epoch_idx % de) == 0,
+                grads_phase(True, True), grads_phase(False, True),
+                state1, data_local[0])
+        elif de == 1:
+            new_state, g_grads, metrics = jax.lax.cond(
+                (epoch_idx % ge) == 0,
+                grads_phase(True, True), grads_phase(True, False),
+                state1, data_local[0])
+        else:
+            idx = ((epoch_idx % de) == 0).astype(jnp.int32) * 2 \
+                + ((epoch_idx % ge) == 0).astype(jnp.int32)
+            new_state, g_grads, metrics = jax.lax.switch(
+                idx, [grads_phase(False, False), grads_phase(False, True),
+                      grads_phase(True, False), grads_phase(True, True)],
+                state1, data_local[0])
+
+        def gen_segment(ns, gg):
+            synced, new_sync = schedule.exchange(
+                comm, gg, ns["sync"], ns["epoch"])
+            return rank_apply(ns, synced, new_sync, wcfg)
+
+        if ge == 1:
+            out = gen_segment(new_state, g_grads)
+        else:
+            out = jax.lax.cond(
+                (epoch_idx % ge) == 0, gen_segment,
+                lambda ns, gg: dict(ns, epoch=ns["epoch"] + 1),
+                new_state, g_grads)
         out = jax.tree.map(lambda x: x[None], out)
         metrics = jax.tree.map(lambda x: x[None], metrics)
         return out, metrics

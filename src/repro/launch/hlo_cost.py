@@ -196,6 +196,11 @@ class CostReport:
     collective_ops: Dict[str, int] = dataclasses.field(
         default_factory=lambda: defaultdict(int))
     cross_pod_bytes: float = 0.0     # traffic whose groups span pods (DCI)
+    # wire-dtype breakdown (ISSUE 7): which element type the collective
+    # payloads actually travel as — a bf16 ring payload shows up here as
+    # collective bytes under "bf16" instead of "f32", halving the entry
+    collective_bytes_by_dtype: Dict[str, float] = dataclasses.field(
+        default_factory=lambda: defaultdict(float))
 
     @property
     def total_collective_bytes(self) -> float:
@@ -209,6 +214,8 @@ class CostReport:
             "collective_ops": dict(self.collective_ops),
             "total_collective_bytes": self.total_collective_bytes,
             "cross_pod_bytes": self.cross_pod_bytes,
+            "collective_bytes_by_dtype": dict(
+                self.collective_bytes_by_dtype),
         }
 
 
@@ -347,6 +354,10 @@ def analyze(hlo: str, fused_scopes: Tuple[str, ...] = (),
                                  for a in op.args) or nbytes
                 report.collective_bytes[base] += mult * nbytes
                 report.collective_ops[base] += int(mult)
+                dm = _SHAPE_RE.search(op.type_str)
+                if dm and dm.group(1) in _DTYPE_BYTES:
+                    report.collective_bytes_by_dtype[dm.group(1)] += \
+                        mult * nbytes
                 if _crosses_pod(op.body, pod_size):
                     report.cross_pod_bytes += mult * nbytes
                 continue

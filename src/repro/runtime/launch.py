@@ -321,9 +321,24 @@ def _worker_main(rank: int, run_dir: str) -> int:
                     timeout=timeout)
     barrier = Barrier(run_dir, rank, R, timeout=timeout)
 
-    fn_grads = jax.jit(lambda s, d: workflow.rank_grads(s, d, wcfg))
+    # cadence-aware per-rank steps: the proc runtime's epoch loop is eager
+    # Python, so the SPMD backends' SPMD-uniform lax.cond becomes a plain
+    # `if` on the same epoch-derived predicates (identical on every rank,
+    # so the lock-step exchange pairing stays matched — exchanges happen on
+    # exactly the generator-due epochs everywhere).  Each (disc, gen) flag
+    # combination jits its own specialization, so off-epochs genuinely run
+    # the smaller program.
+    import functools
+    fn_grads = {}
+    for ud in (True, False):
+        for ug in (True, False):
+            fn_grads[(ud, ug)] = jax.jit(functools.partial(
+                lambda s, d, ud, ug: workflow.rank_grads(
+                    s, d, wcfg, update_disc=ud, update_gen=ug),
+                ud=ud, ug=ug))
     fn_apply = jax.jit(
         lambda s, g, ns: workflow.rank_apply(s, g, ns, wcfg))
+    fn_bump = jax.jit(lambda s: dict(s, epoch=s["epoch"] + 1))
 
     start = 0
     ckpt_dir = os.path.join(run_dir, "ckpt", f"rank_{rank}")
@@ -343,11 +358,17 @@ def _worker_main(rank: int, run_dir: str) -> int:
     for e in range(start, n_epochs):
         jitter.apply(rank, e)
         t0 = time.perf_counter()
-        new_state, g_grads, metrics = fn_grads(state, data_local)
-        comm.begin_epoch(e)
-        synced, new_sync = schedule.exchange(
-            comm, g_grads, new_state["sync"], new_state["epoch"])
-        state = fn_apply(new_state, synced, new_sync)
+        disc_due = (e % wcfg.disc_every) == 0
+        gen_due = (e % wcfg.gen_every) == 0
+        new_state, g_grads, metrics = fn_grads[(disc_due, gen_due)](
+            state, data_local)
+        if gen_due:
+            comm.begin_epoch(e)
+            synced, new_sync = schedule.exchange(
+                comm, g_grads, new_state["sync"], new_state["epoch"])
+            state = fn_apply(new_state, synced, new_sync)
+        else:                       # disc-only epoch: no exchange, no apply
+            state = fn_bump(new_state)
         jax.block_until_ready(state)
         hist["epoch_s"].append(time.perf_counter() - t0)
         hist["d_loss"].append(float(metrics["d_loss"]))

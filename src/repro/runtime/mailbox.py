@@ -88,6 +88,19 @@ _MBX_OFF_WSEQ, _MBX_OFF_ACK, _MBX_OFF_TAG, _MBX_OFF_NBYTES = \
 _SLOT_OFF_LOCK, _SLOT_OFF_LOGICAL, _SLOT_OFF_TAG = field_offsets(_SLOT_HDR)
 
 
+def payload_nbytes(n_elems: int, dtype) -> int:
+    """Window payload size for `n_elems` scalars of `dtype` — derived from
+    the dtype's ITEMSIZE (a bf16 window is half its fp32 counterpart),
+    never from an assumed 4-byte word.  `ProcComm` sizes its windows from
+    the serialized payload (`len(tree_to_bytes(tree))`), which agrees with
+    this by construction; callers that pre-size a window (tests, future
+    cross-host transports) must go through here so the derivation lives in
+    one place (`repro.analysis.model.window_layout_model` pins it)."""
+    import ml_dtypes  # noqa: F401  (registers "bfloat16" with numpy)
+    import numpy as np
+    return int(n_elems) * int(np.dtype(dtype).itemsize)
+
+
 # -- fault-injection trace hook ----------------------------------------------
 #
 # The analysis lane's harness (`repro.analysis.faults`) installs a callable

@@ -149,6 +149,62 @@ def test_struct_offsets_match_derivation():
     assert field_offsets(_SLOT_HDR) == (0, 8, 16)
 
 
+def test_window_layout_matches_model_across_itemsizes(tmp_path):
+    # ISSUE 7: window/slot byte sizes derive from the payload dtype's
+    # itemsize.  Pin the REAL constructors against the independent
+    # layout model at bf16 (2), fp32 (4) and fp64 (8) itemsizes, so the
+    # checker's line anchors keep covering the resized windows.
+    import numpy as np
+    from repro.analysis import window_layout_model
+    from repro.runtime.mailbox import payload_nbytes
+    for dtype, itemsize in (("bfloat16", 2), ("float32", 4),
+                            ("float64", 8)):
+        n_elems = 7
+        nbytes = payload_nbytes(n_elems, dtype)
+        model = window_layout_model(n_elems, itemsize, n_ranks=3)
+        assert nbytes == model["nbytes"] == n_elems * itemsize
+        mbx = Mailbox(str(tmp_path / f"m_{itemsize}.bin"), nbytes,
+                      timeout=1.0)
+        assert mbx._size == model["mailbox_size"]
+        brd = Board(str(tmp_path / f"b_{itemsize}.bin"), nbytes,
+                    n_ranks=3, timeout=1.0)
+        assert brd._stride == model["board_stride"]
+        assert brd._acks_off == model["board_acks_off"]
+        assert brd._size == model["board_size"]
+    # bfloat16 itemsize really is 2 on this interpreter (ml_dtypes)
+    import ml_dtypes  # noqa: F401
+    assert np.dtype("bfloat16").itemsize == 2
+
+
+def test_bf16_mailbox_roundtrip_bit_exact(tmp_path):
+    # a bf16 payload ships through a dtype-sized window and comes back
+    # BIT-exact — the wire must never widen or re-round the halves
+    import numpy as np
+    from repro.runtime.mailbox import payload_nbytes
+    import ml_dtypes  # noqa: F401
+    bf16 = np.dtype("bfloat16")
+    vals = np.array([1.0, -2.5, 3.0e-3, 65280.0, -0.1875, 7.0, 0.0,
+                     1.5e-2], dtype=np.float32).astype(bf16)
+    payload = vals.tobytes()
+    assert len(payload) == payload_nbytes(vals.size, bf16)
+    p = str(tmp_path / "bf16.bin")
+    wr = Mailbox.for_writer(p, len(payload), timeout=5.0)
+    rd = Mailbox.for_reader(p, len(payload), timeout=5.0)
+    wr.write(payload, tag=3, lockstep=True)
+    out, tag = rd.read(lockstep=True)
+    assert tag == 3
+    assert out == payload                     # byte-for-byte
+    back = np.frombuffer(out, dtype=bf16)
+    assert back.tobytes() == vals.tobytes()   # and bit-exact as bf16
+    # board path too: depth-2 slots sized from the same derivation
+    bp = str(tmp_path / "bf16_board.bin")
+    bwr = Board.for_writer(bp, len(payload), n_ranks=1, timeout=5.0)
+    brd = Board.for_reader(bp, len(payload), n_ranks=1, timeout=5.0)
+    bwr.write(payload, readers=[0], lockstep=True)
+    buf = brd.read(0, lockstep=True)
+    assert buf == payload
+
+
 # ---------------------------------------------------------------------------
 # fault injection: the real mmap code under adversarial interleavings
 
@@ -329,3 +385,36 @@ def test_lint_struct_offsets():
     offs = sorted(int(p.split("offset ")[1].split(" ")[0])
                   for p in problems)
     assert offs == [0, 16, 24], problems
+
+
+def test_lint_payload_dtype_discipline():
+    bad = (
+        "import jax.numpy as jnp\n"
+        "def flatten(self, tree):\n"
+        "    return x.astype(jnp.float32)\n"       # silent upcast: flagged
+        "def empty(self, shape):\n"
+        "    return jnp.zeros(shape, dtype='bfloat16')\n"  # re-hardcoded
+        "def payload_dtype_of(p):\n"               # blessed registry site
+        "    return jnp.dtype('float32')\n"
+        "def unflatten(self, flat, g):\n"
+        "    return flat.astype(g.dtype)\n")       # leaf-derived: allowed
+    problems = lint.lint_sources({"core/ring.py": RING_SRC,
+                                  "core/sync.py": bad})
+    dt = [p for p in problems if "hard-coded float dtype" in p]
+    assert len(dt) == 2, problems
+    assert any("`float32`" in p for p in dt) and \
+        any("`bfloat16`" in p for p in dt), dt
+
+
+def test_lint_fusionspec_build_kwarg():
+    bad = (
+        "def make_schedule(wcfg):\n"
+        "    return sync_lib.FusionSpec.build(example, mask)\n")
+    good = bad.replace(
+        "(example, mask)", "(example, mask, payload_dtype=dt)")
+    problems = lint.lint_sources({"core/ring.py": RING_SRC,
+                                  "core/workflow.py": bad})
+    assert any("without the payload_dtype= keyword" in p
+               for p in problems), problems
+    assert lint.lint_sources({"core/ring.py": RING_SRC,
+                              "core/workflow.py": good}) == []
