@@ -1,0 +1,211 @@
+"""ISSUE 8 evidence gate — batched solve-service latency / throughput.
+
+Measures the full request path of `repro.serving.SolveService` (submit ->
+bucket -> queue -> warm executable -> result) on CPU-scale trained
+generator stacks, per (problem, batch-bucket):
+
+* cold_compile_s   first `CompileCache.get` of the key: trace + XLA
+                   compile + one dummy-batch execution (what a cache MISS
+                   costs a client);
+* warm_hit_s       the same `get` once cached (what every later request
+                   pays for executable lookup);
+* p50/p99 latency  single-request round trips through submit + drain on
+                   the warm pool, best-of-`reps` percentile series
+                   following the docs/benchmarks.md timeit convention;
+* throughput_rps   a queue-capacity burst of requests drained in
+                   max_batch-sized fused batches.
+
+Rows carry the standard `problem` / `schedule` / `backend` fields
+(schedule is the literal "serving" — these rows measure the request path,
+not a training schedule; the generators' training recipe is recorded
+top-level for provenance).  Writes BENCH_serving.json at the repo root
+(plus benchmarks/results/):
+
+    PYTHONPATH=src python -m benchmarks.serving [--quick]
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+import time
+
+import numpy as np
+
+from .common import save_result
+
+PROBLEMS = ("proxy1d", "proxy2d")
+BUCKETS = (64, 256)
+TRAIN_EPOCHS = 300
+
+
+def run(problems=PROBLEMS, buckets=BUCKETS, n_requests=24, reps=3,
+        train_epochs=TRAIN_EPOCHS, quick=False, out_path=None, seed=0):
+    if quick:
+        problems, n_requests, reps, train_epochs = (problems[0],), 6, 1, 50
+
+    import jax
+    import jax.numpy as jnp
+
+    sys.path.insert(0, os.path.join(os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))), "src"))
+    from repro.core import workflow
+    from repro.core.sync import SyncConfig
+    from repro.core.workflow import SolveConfig
+    from repro.problems import get_problem
+    from repro.serving import ServingConfig, SolveService
+
+    cfg = ServingConfig(
+        buckets=tuple(buckets), max_batch=8, queue_capacity=64,
+        cache_capacity=max(4, len(problems) * len(buckets)),
+        solve=SolveConfig(n_candidates=64, events_per_candidate=32,
+                          top_frac=0.25))
+    svc = SolveService(cfg)
+
+    train_recipe = dict(ranks=4, n_param_samples=16, events_per_sample=8,
+                        h=10, mode="rma_arar_arar", epochs=train_epochs,
+                        gen_lr=2e-4, disc_lr=5e-4)
+    datasets = {}
+    for name in problems:
+        prob = get_problem(name)
+        wcfg = workflow.WorkflowConfig(
+            sync=SyncConfig(mode=train_recipe["mode"], h=train_recipe["h"]),
+            n_param_samples=train_recipe["n_param_samples"],
+            events_per_sample=train_recipe["events_per_sample"],
+            gen_lr=train_recipe["gen_lr"], disc_lr=train_recipe["disc_lr"],
+            problem=name)
+        data = prob.make_reference_data(jax.random.PRNGKey(99),
+                                        2 * max(buckets))
+        t0 = time.perf_counter()
+        state, _ = workflow.train_vmap(jax.random.PRNGKey(seed), wcfg, 2, 2,
+                                       train_epochs, data, chunk=100)
+        svc.register_problem(name, gen_stack=state["gen"])
+        datasets[name] = np.asarray(data)
+        print(f"  trained {name}: {train_epochs} epochs in "
+              f"{time.perf_counter() - t0:.1f}s", flush=True)
+
+    rows = []
+    for name in problems:
+        prob = get_problem(name)
+        data = datasets[name]
+        for bucket in buckets:
+            # cold: compile cost of this (problem, bucket) executable.
+            # Force a genuine miss by evicting through a scratch key-less
+            # fresh service sharing the stack — simpler: a fresh cache.
+            from repro.serving import CompileCache
+            svc.cache = CompileCache(cfg.cache_capacity)
+            t0 = time.perf_counter()
+            svc._executable(name, bucket)
+            cold_s = time.perf_counter() - t0
+            t0 = time.perf_counter()
+            svc._executable(name, bucket)
+            warm_hit_s = time.perf_counter() - t0
+
+            # single-request latency series on the warm pool
+            lat = []
+            residual = None
+            for rep in range(reps):
+                rep_lat = []
+                for i in range(n_requests):
+                    n = bucket if i % 2 == 0 else max(1, bucket // 2 + 1)
+                    y = data[(7 * i) % bucket: (7 * i) % bucket + n]
+                    t0 = time.perf_counter()
+                    ticket = svc.submit(name, y)
+                    svc.run_until_empty()
+                    out = ticket.result(timeout=60)
+                    rep_lat.append(time.perf_counter() - t0)
+                    if residual is None:
+                        residual = float(prob.mean_abs_residual(
+                            out["params"]))
+                lat = rep_lat if not lat else [
+                    min(a, b) for a, b in zip(lat, rep_lat)]
+
+            # throughput: a queue-capacity burst drained in fused batches
+            burst = min(cfg.queue_capacity, 4 * cfg.max_batch)
+            tickets = [svc.submit(name, data[:bucket])
+                       for _ in range(burst)]
+            t0 = time.perf_counter()
+            served = svc.run_until_empty()
+            burst_s = time.perf_counter() - t0
+            assert served == burst and all(t.done() for t in tickets)
+
+            row = {
+                "problem": name, "schedule": "serving", "backend": "vmap",
+                "bucket": bucket, "max_batch": cfg.max_batch,
+                "n_requests": n_requests, "reps": reps,
+                "cold_compile_s": cold_s, "warm_hit_s": warm_hit_s,
+                "p50_ms": float(np.percentile(lat, 50) * 1e3),
+                "p99_ms": float(np.percentile(lat, 99) * 1e3),
+                "throughput_rps": served / burst_s,
+                "residual": residual,
+            }
+            rows.append(row)
+            print(f"  {name:>8s} bucket {bucket:4d}: cold {cold_s:6.2f}s "
+                  f"warm-hit {warm_hit_s * 1e6:7.1f}us  "
+                  f"p50 {row['p50_ms']:7.2f}ms p99 {row['p99_ms']:7.2f}ms  "
+                  f"{row['throughput_rps']:7.1f} req/s  "
+                  f"|r|={residual:.3f}", flush=True)
+
+    import jax
+    payload = {
+        "benchmark": "serving", "buckets": list(buckets),
+        "max_batch": cfg.max_batch, "queue_capacity": cfg.queue_capacity,
+        "cache_capacity": cfg.cache_capacity,
+        "solve": {"n_candidates": cfg.solve.n_candidates,
+                  "events_per_candidate": cfg.solve.events_per_candidate,
+                  "top_frac": cfg.solve.top_frac},
+        "train_recipe": train_recipe,
+        "jax_platform": jax.default_backend(),
+        "provenance": "measured fresh in the PR introducing the serving "
+                      "subsystem (no prior series to carry forward); "
+                      "latencies are best-of-reps percentile series per "
+                      "the docs/benchmarks.md timeit convention, on the "
+                      "warm executable pool; cold_compile_s is the same "
+                      "key's first CompileCache.get (trace + compile + "
+                      "one dummy batch)",
+        "rows": rows,
+    }
+    save_result("serving" + ("_quick" if quick else ""), payload)
+    if not quick:
+        root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+        with open(out_path or os.path.join(root, "BENCH_serving.json"),
+                  "w") as f:
+            json.dump(payload, f, indent=1)
+    return payload
+
+
+def check(payload):
+    """Acceptance predicate: >= 2 problems x >= 2 buckets of finite
+    latency rows, and the warm pool genuinely warm — a cache hit must be
+    orders of magnitude under the cold compile, and p99 must not pay a
+    recompile (p99 < cold_compile)."""
+    rows = payload["rows"]
+    ok = len({r["problem"] for r in rows}) >= 2 \
+        and len({r["bucket"] for r in rows}) >= 2
+    if not ok:
+        print(f"FAIL coverage: {len(rows)} rows")
+    for r in rows:
+        label = f"{r['problem']}/bucket{r['bucket']}"
+        if not (0 < r["p50_ms"] <= r["p99_ms"]
+                and r["throughput_rps"] > 0):
+            print(f"FAIL finite: {label} {r}")
+            ok = False
+        if r["warm_hit_s"] > r["cold_compile_s"] / 100:
+            print(f"FAIL warm pool: {label} hit {r['warm_hit_s']:.4f}s vs "
+                  f"cold {r['cold_compile_s']:.2f}s")
+            ok = False
+        if r["p99_ms"] >= r["cold_compile_s"] * 1e3:
+            print(f"FAIL p99 pays a recompile: {label}")
+            ok = False
+    print("acceptance:", "OK" if ok else "FAILED")
+    return ok
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    a = ap.parse_args()
+    p = run(quick=a.quick)
+    if not a.quick:
+        check(p)

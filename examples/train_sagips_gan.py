@@ -42,6 +42,33 @@ from repro.core.workflow import WorkflowConfig
 from repro.problems import available, get_problem
 
 
+def report_final(problem, gen_stack, data):
+    """Final report shared by both backends: the ensemble prediction (§VI-A)
+    plus the serving-path solve — `workflow.make_solver` scoring candidates
+    from the trained stack against the reference events, i.e. exactly what
+    `repro.serving.SolveService` computes for a client submitting `data`."""
+    import jax.numpy as jnp
+    from repro.core.workflow import SolveConfig, make_solver
+
+    noise = jax.random.normal(jax.random.PRNGKey(7), (256, gan.NOISE_DIM))
+    p_hat, sigma = ensemble_response(gen_stack, noise)
+    truth = np.asarray(problem.true_params())
+    print("\nfinal ensemble prediction vs truth:")
+    for i in range(problem.n_params):
+        print(f"  p{i}: {float(p_hat[i]):.4f} ± {float(sigma[i]):.4f} "
+              f"(truth {float(truth[i]):.4f})")
+
+    solve = make_solver(problem, SolveConfig())
+    n = min(int(data.shape[0]), 1024)
+    out = solve(gen_stack, jnp.asarray(data[None, :n]),
+                jnp.ones((1, n), bool))
+    r_ens = float(problem.mean_abs_residual(p_hat))
+    r_sol = float(problem.mean_abs_residual(out["params"][0]))
+    print(f"serving-path solve (make_solver, {n} events): "
+          f"mean|r̂|={r_sol:.4f} vs ensemble {r_ens:.4f} "
+          f"(score {float(out['score'][0]):.3f})")
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--mode", choices=MODES, default="rma_arar_arar")
@@ -186,14 +213,7 @@ def main():
             print(f"checkpoint already covers --epochs {args.epochs}; "
                   f"restored final state without training "
                   f"({time.time() - t0:.0f}s)")
-        noise = jax.random.normal(jax.random.PRNGKey(7),
-                                  (256, gan.NOISE_DIM))
-        p_hat, sigma = ensemble_response(out["state"]["gen"], noise)
-        truth = np.asarray(problem.true_params())
-        print("\nfinal ensemble prediction vs truth:")
-        for i in range(problem.n_params):
-            print(f"  p{i}: {float(p_hat[i]):.4f} ± {float(sigma[i]):.4f} "
-                  f"(truth {float(truth[i]):.4f})")
+        report_final(problem, out["state"]["gen"], data)
         return
 
     print(f"problem={args.problem} ({problem.n_params} params -> "
@@ -261,12 +281,7 @@ def main():
                                       "problem": args.problem,
                                       "schedule": args.sync_schedule})
 
-    p_hat, sigma = ensemble_response(state["gen"], noise)
-    truth = np.asarray(problem.true_params())
-    print("\nfinal ensemble prediction vs truth:")
-    for i in range(problem.n_params):
-        print(f"  p{i}: {float(p_hat[i]):.4f} ± {float(sigma[i]):.4f} "
-              f"(truth {float(truth[i]):.4f})")
+    report_final(problem, state["gen"], data)
 
 
 if __name__ == "__main__":

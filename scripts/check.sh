@@ -27,6 +27,11 @@
 #                                    # master state, HLO cadence pins,
 #                                    # cross-backend equivalence) plus the
 #                                    # dtype-discipline linter checks
+#   scripts/check.sh --serving       # serving lane: solve-service tests
+#                                    # (bucketing, LRU compile cache,
+#                                    # backpressure, Gate interleavings,
+#                                    # per-problem e2e solve quality) after
+#                                    # the serving-jit lint check
 #   scripts/check.sh --docs          # docs lane: dead links, stale file
 #                                    # references, package docstrings
 #                                    # (scripts/docs_lint.py)
@@ -61,6 +66,12 @@ if [[ "${1:-}" == "--precision" ]]; then
     python scripts/repro_lint.py
     exec env PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
         python -m pytest -x -q tests/test_precision.py "$@"
+fi
+if [[ "${1:-}" == "--serving" ]]; then
+    shift
+    python scripts/repro_lint.py
+    exec env PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
+        python -m pytest -x -q tests/test_serving.py "$@"
 fi
 if [[ "${1:-}" == "--docs" ]]; then
     shift

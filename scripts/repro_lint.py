@@ -39,6 +39,12 @@ over `src/repro`.
      the bf16 ring), and every `FusionSpec.build(...)` call site in
      `src/repro` must pass the `payload_dtype=` keyword rather than
      re-deriving the wire dtype.
+  7. Serving jit discipline — the serving surface (`serving/*.py` and
+     `launch/serve.py`) may not call `jax.jit`/`jax.pjit` outside the
+     compile-cache module `serving/cache.py`: every jitted callable must
+     come from `jit_compile` / `CompileCache.get`, so a new code path
+     cannot silently bypass the warm executable pool and reintroduce
+     per-request compiles.
 
 Exit status is the number of problems found (0 == clean), matching
 `scripts/docs_lint.py` so the lanes compose.
@@ -392,6 +398,30 @@ def check_build_kwarg(rel: str, tree: ast.AST, problems: List[str]):
 
 
 # ---------------------------------------------------------------------------
+# 7. Serving jit discipline (warm-pool bypass protection)
+
+SERVING_JIT_SITE = "serving/cache.py"
+
+
+def _is_serving_surface(rel: str) -> bool:
+    return (rel.startswith("serving/") or rel == "launch/serve.py") \
+        and rel != SERVING_JIT_SITE
+
+
+def check_serving_jit(rel: str, tree: ast.AST, problems: List[str]):
+    for call in ast.walk(tree):
+        if not isinstance(call, ast.Call):
+            continue
+        c = _chain(call.func)
+        if c and c[0] == "jax" and c[1][-1:] in (["jit"], ["pjit"]):
+            problems.append(
+                f"{rel}:{call.lineno}: jax.{c[1][-1]}() on the serving "
+                f"surface outside {SERVING_JIT_SITE} — route it through "
+                f"serving.cache.jit_compile / CompileCache so the warm "
+                f"executable pool cannot be bypassed")
+
+
+# ---------------------------------------------------------------------------
 
 
 def lint_sources(sources: Dict[str, str]) -> List[str]:
@@ -414,6 +444,8 @@ def lint_sources(sources: Dict[str, str]) -> List[str]:
             check_struct_offsets(rel, tree, problems)
         if rel == SYNC:
             check_payload_dtype(rel, tree, problems)
+        if _is_serving_surface(rel):
+            check_serving_jit(rel, tree, problems)
         check_build_kwarg(rel, tree, problems)
     return problems
 

@@ -66,11 +66,24 @@ class Gate:
 
 
 class InterleavingDriver:
-    """Context manager owning the mailbox trace hook for one scenario."""
+    """Context manager owning a trace hook for one scenario.
 
-    def __init__(self):
+    `set_hook` picks WHICH surface's hook the driver drives — default is
+    the runtime mailbox (`runtime.mailbox.set_hook`, the historical
+    behavior); the serving queue exposes the same hook shape
+    (`serving.queue.set_hook`), so ISSUE 8's concurrency regression tests
+    reuse this harness unchanged:
+
+        with InterleavingDriver(set_hook=serving_queue.set_hook) as drv:
+            gate = drv.gate("queue.drain")
+            ...
+    """
+
+    def __init__(self, set_hook=None):
         self._gates: List[Gate] = []
         self._lock = threading.Lock()
+        self._set_hook = set_hook if set_hook is not None \
+            else mailbox.set_hook
 
     def gate(self, event: str, hit: int = 1,
              path_substr: Optional[str] = None) -> Gate:
@@ -91,11 +104,11 @@ class InterleavingDriver:
             tripped.released.wait(_GATE_TIMEOUT_S)
 
     def __enter__(self) -> "InterleavingDriver":
-        mailbox.set_hook(self._on_event)
+        self._set_hook(self._on_event)
         return self
 
     def __exit__(self, exc_type, exc, tb):
-        mailbox.set_hook(None)
+        self._set_hook(None)
         with self._lock:
             for g in self._gates:
                 g.released.set()

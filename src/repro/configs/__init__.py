@@ -1,7 +1,7 @@
 """Architecture registry: --arch <id> resolves here."""
 from . import (mamba2_130m, qwen3_32b, qwen2_5_3b, hubert_xlarge,
                qwen2_moe_a2_7b, deepseek_67b, internvl2_1b, granite_moe_3b,
-               jamba_1_5_large, tinyllama_1_1b, sagips_gan)
+               jamba_1_5_large, tinyllama_1_1b, sagips_gan, serving)
 from .shapes import SHAPES, InputShape, Plan, plan_for, SWA_WINDOW
 
 ARCHS = {
@@ -24,4 +24,4 @@ def get_config(arch: str, smoke: bool = False):
 
 
 __all__ = ["ARCHS", "get_config", "SHAPES", "InputShape", "Plan", "plan_for",
-           "SWA_WINDOW", "sagips_gan"]
+           "SWA_WINDOW", "sagips_gan", "serving"]

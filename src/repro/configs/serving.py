@@ -1,0 +1,38 @@
+"""Serving presets — ServingConfig/SolveConfig bundles for the solve
+service (ISSUE 8), mirroring how `sagips_gan` bundles WorkflowConfigs.
+
+`DEFAULT` is the production-shaped surface (full bucket ladder, deep
+queue).  `REDUCED` is CPU/test scale: tiny buckets and candidate counts so
+a full submit → bucket → compile → solve round trip stays sub-second in
+the fast test lane.
+"""
+import dataclasses
+
+from ..core.workflow import SolveConfig
+from ..serving.service import ServingConfig
+
+DEFAULT = ServingConfig(
+    buckets=(64, 256, 1024),
+    max_batch=8,
+    queue_capacity=64,
+    cache_capacity=8,
+    retry_after_s=0.05,
+    solve=SolveConfig(n_candidates=128, events_per_candidate=64,
+                      top_frac=0.25),
+)
+
+# CPU-scale: small ladder, small candidate pool, batch of 4
+REDUCED = ServingConfig(
+    buckets=(16, 64),
+    max_batch=4,
+    queue_capacity=16,
+    cache_capacity=4,
+    retry_after_s=0.01,
+    solve=SolveConfig(n_candidates=32, events_per_candidate=16,
+                      top_frac=0.25),
+)
+
+
+def with_buckets(base: ServingConfig, buckets) -> ServingConfig:
+    """A preset with a custom bucket ladder (validated)."""
+    return dataclasses.replace(base, buckets=tuple(buckets))

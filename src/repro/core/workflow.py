@@ -181,6 +181,111 @@ def init_run(key, n_ranks: int, wcfg: WorkflowConfig, data, rank=None):
 
 
 # ----------------------------------------------------------------------------
+# inference-time solving (build/compile split, ISSUE 8)
+
+
+@dataclasses.dataclass(frozen=True)
+class SolveConfig:
+    """How a trained generator stack is inverted against a submitted
+    observation batch (the serving path; the trainer's final report uses
+    the same factory, so "what the solver computes" has one definition).
+
+    The solve is candidate scoring under the generative prior: each of the
+    R stacked generators proposes `n_candidates` parameter draws, each
+    candidate is pushed through the problem's forward model for
+    `events_per_candidate` events, and candidates are scored by how well
+    their simulated event moments match the (masked) moments of the
+    submitted `y`.  The estimate is the mean of the best `top_frac`
+    fraction of candidates; `top_frac=1.0` degenerates to the unweighted
+    ensemble prior mean — independent of `y` by construction (pinned by
+    tests/test_serving.py::test_top_frac_one_is_prior_mean).
+    """
+    n_candidates: int = 128        # candidate draws PER generator rank
+    events_per_candidate: int = 64
+    top_frac: float = 0.25         # fraction of candidates kept (0, 1]
+    seed: int = 0                  # solve is deterministic per config
+    sampler_impl: str = "jnp"      # 'jnp' | 'pallas' (same dispatch as train)
+    sampler_interpret: Optional[bool] = None
+
+    def __post_init__(self):
+        if self.n_candidates < 1 or self.events_per_candidate < 1:
+            raise ValueError(
+                f"need n_candidates >= 1 and events_per_candidate >= 1, got "
+                f"{self.n_candidates} / {self.events_per_candidate}")
+        if not (0.0 < self.top_frac <= 1.0):
+            raise ValueError(
+                f"top_frac must be in (0, 1], got {self.top_frac}")
+
+
+def make_solver(problem, cfg: SolveConfig):
+    """Build (do NOT run or compile) the solve function for `problem`.
+
+    Returns `solve(gen_stack, ys, mask) -> {"params", "sigma", "score"}`:
+
+      gen_stack   stacked generator pytree `[R, ...]` (a trained
+                  checkpoint's `state["gen"]`, or one rank's `[1, ...]`)
+      ys          `[B, bucket, obs_dim]` padded observation batches
+      mask        `[B, bucket]` bool, True on real event rows
+      params      `[B, n_params]` posterior estimate per request
+      sigma       `[B, n_params]` spread of the kept candidates
+      score       `[B]` mean moment-match score of the kept candidates
+                  (higher is better; 0 is a perfect moment match)
+
+    The function is pure and shape-specialized in (R, B, bucket) — the
+    serving layer owns WHERE it is compiled (`serving.cache`, one warm
+    executable per (problem, bucket)); this factory owns only WHAT it
+    computes.  Candidate generation and forward simulation depend only on
+    `gen_stack`, so inside one call they are computed once and shared
+    across the B requests; only the cheap moment scoring is vmapped per
+    request.
+    """
+    M, E = cfg.n_candidates, cfg.events_per_candidate
+    key = jax.random.PRNGKey(cfg.seed)
+    k_noise, k_u = jax.random.split(key)
+
+    def _moments(events, w):
+        """Masked per-dim mean/std of events [N, obs] with weights [N]."""
+        n = jnp.maximum(w.sum(), 1.0)
+        mean = (events * w[:, None]).sum(axis=0) / n
+        var = (((events - mean) ** 2) * w[:, None]).sum(axis=0) / n
+        return jnp.concatenate([mean, jnp.sqrt(var + 1e-12)])
+
+    def solve(gen_stack, ys, mask):
+        R = jax.tree.leaves(gen_stack)[0].shape[0]
+        noise = jax.random.normal(k_noise, (R, M, gan.NOISE_DIM))
+        cands = jax.vmap(gan.generate_params)(gen_stack, noise)
+        cands = cands.reshape(R * M, -1)              # [RM, n_params]
+        u = jax.random.uniform(
+            k_u, (R * M, E, problem.noise_channels))
+        events = problem.sample_events(
+            cands, u, impl=cfg.sampler_impl,
+            interpret=cfg.sampler_interpret)
+        events = events.reshape(R * M, E, -1)          # [RM, E, obs]
+        ones = jnp.ones((E,), events.dtype)
+        cand_mom = jax.vmap(lambda ev: _moments(ev, ones))(events)  # [RM, 2*obs]
+        # scale-free scoring: normalize each moment dim by its spread
+        # across candidates so no observable dominates the distance
+        scale = cand_mom.std(axis=0) + 1e-6
+
+        def score_one(y, w):
+            y_mom = _moments(y, w.astype(y.dtype))
+            d = (cand_mom - y_mom[None, :]) / scale[None, :]
+            return -jnp.mean(d * d, axis=1)            # [RM], 0 = perfect
+
+        scores = jax.vmap(score_one)(ys, mask)         # [B, RM]
+        k = max(1, int(round(cfg.top_frac * R * M)))
+        top_scores, top_idx = jax.lax.top_k(scores, k)
+        kept = jnp.take(cands, top_idx, axis=0)        # [B, k, n_params]
+        return {
+            "params": kept.mean(axis=1),
+            "sigma": kept.std(axis=1),
+            "score": top_scores.mean(axis=1),
+        }
+
+    return solve
+
+
+# ----------------------------------------------------------------------------
 # per-rank compute
 
 

@@ -1,6 +1,31 @@
-"""Serving engine for the seed's model scaffolding (prefill/decode step
-factories).  Not used by the SAGIPS training workflow.
+"""The SAGIPS serving surface — batched inverse-problem solving as a
+request-driven service (ISSUE 8).
+
+Clients `submit(problem, y)` observations for a registered
+`InverseProblem`; the service shape-buckets and batches the requests
+(`bucketing`), runs them through a pool of warm pre-compiled
+per-(problem, bucket) executables (`cache`, LRU), and bounds admission
+with reject-not-block backpressure (`queue`).  What each executable
+computes comes from `core.workflow.make_solver` — the same factory the
+trainer's final report uses.  Entry points: `SolveService` here,
+`launch/serve.py` on the CLI, `benchmarks/serving.py` for the
+BENCH_serving.json lane; docs/serving.md has the lifecycle tour.
+
+`engine` is the seed's LLM prefill/decode scaffolding (unrelated to the
+solve service) and keeps its historical exports.
 """
+from .bucketing import RequestTooLarge, bucket_for, make_buckets, pad_events
+from .cache import CompileCache, jit_compile
+from .queue import Backpressure, BoundedRequestQueue
+from .service import (ServingConfig, ServingError, SolveService, Ticket,
+                      load_generator_stack)
 from .engine import make_serve_step, make_prefill_fn, generate, serve_specs
 
-__all__ = ["make_serve_step", "make_prefill_fn", "generate", "serve_specs"]
+__all__ = [
+    "Backpressure", "BoundedRequestQueue", "CompileCache", "RequestTooLarge",
+    "ServingConfig", "ServingError", "SolveService", "Ticket",
+    "bucket_for", "jit_compile", "load_generator_stack", "make_buckets",
+    "pad_events",
+    # seed LLM scaffolding
+    "make_serve_step", "make_prefill_fn", "generate", "serve_specs",
+]

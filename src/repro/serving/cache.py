@@ -1,0 +1,82 @@
+"""Warm-executable compile cache — the ONE `jax.jit` site of the serving
+surface.
+
+The solve service keeps a pool of pre-compiled per-(problem, batch-bucket)
+executables.  Compilation is the dominant cold-start cost (hundreds of ms
+to seconds per shape on CPU, more on accelerators), so the pool is an LRU
+cache: hot (problem, bucket) keys stay warm, cold ones are evicted when
+`capacity` is exceeded, and a re-requested evicted key simply recompiles.
+
+Discipline (enforced by `scripts/repro_lint.py` check 7): serving-surface
+modules (`serving/*.py` outside this file, plus `launch/serve.py`) may not
+call `jax.jit` directly — every jitted callable must come from
+`jit_compile` or a `CompileCache`, so a new code path cannot silently
+bypass the warm pool and reintroduce per-request compiles.
+
+Thread-safety: `get` is atomic under one lock (hit bookkeeping, miss
+build, eviction).  The builder runs inside the lock — by design, so two
+racing drainers can never compile the same key twice; serving drain loops
+are single-threaded per service, so the lock is uncontended in practice.
+"""
+from __future__ import annotations
+
+import threading
+from collections import OrderedDict
+from typing import Any, Callable, Dict, Hashable, List
+
+import jax
+
+
+def jit_compile(fn: Callable, **jit_kwargs) -> Callable:
+    """The blessed `jax.jit` wrapper for the serving surface (see the
+    module docstring).  Identical semantics to `jax.jit`."""
+    return jax.jit(fn, **jit_kwargs)
+
+
+class CompileCache:
+    """LRU cache of compiled executables keyed by an arbitrary hashable.
+
+    `get(key, builder)` returns the cached callable, or calls `builder()`
+    (which is expected to return a jitted/compiled callable) on a miss,
+    inserts the result, and evicts the least-recently-used entries down to
+    `capacity`.  Every hit refreshes the key's recency.  `capacity=1`
+    degenerates to "exactly the last key stays warm" — each distinct key
+    evicts the previous one.
+    """
+
+    def __init__(self, capacity: int):
+        if capacity < 1:
+            raise ValueError(f"cache capacity must be >= 1, got {capacity}")
+        self.capacity = capacity
+        self._entries: "OrderedDict[Hashable, Any]" = OrderedDict()
+        self._lock = threading.Lock()
+        self.stats: Dict[str, int] = {
+            "hits": 0, "misses": 0, "compiles": 0, "evictions": 0}
+
+    def get(self, key: Hashable, builder: Callable[[], Any]):
+        with self._lock:
+            if key in self._entries:
+                self._entries.move_to_end(key)
+                self.stats["hits"] += 1
+                return self._entries[key]
+            self.stats["misses"] += 1
+            fn = builder()
+            self.stats["compiles"] += 1
+            self._entries[key] = fn
+            while len(self._entries) > self.capacity:
+                self._entries.popitem(last=False)
+                self.stats["evictions"] += 1
+            return fn
+
+    def __contains__(self, key: Hashable) -> bool:
+        with self._lock:
+            return key in self._entries
+
+    def __len__(self) -> int:
+        with self._lock:
+            return len(self._entries)
+
+    def keys(self) -> List[Hashable]:
+        """Keys in eviction order: least-recently-used first."""
+        with self._lock:
+            return list(self._entries)

@@ -18,6 +18,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from ..models import model as model_lib
 from ..models.config import ModelConfig
 from ..parallel import sharding as shd
+from .cache import jit_compile
 
 
 def serve_specs(cfg: ModelConfig, batch: int, context_len: int):
@@ -42,14 +43,14 @@ def make_serve_step(cfg: ModelConfig, mesh: Optional[Mesh] = None,
     def step(params, tokens, cache):
         with shd.axis_rules(mesh):
             return model_lib.decode_step(params, tokens, cache, cfg)
-    return jax.jit(step, donate_argnums=(2,) if donate_cache else ())
+    return jit_compile(step, donate_argnums=(2,) if donate_cache else ())
 
 
 def make_prefill_fn(cfg: ModelConfig, mesh: Optional[Mesh] = None):
     def fn(params, batch, context_len=None):
         with shd.axis_rules(mesh):
             return model_lib.prefill(params, batch, cfg, context_len)
-    return jax.jit(fn, static_argnames=("context_len",))
+    return jit_compile(fn, static_argnames=("context_len",))
 
 
 def generate(params, cfg: ModelConfig, prompt_tokens, max_new_tokens: int,

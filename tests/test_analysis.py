@@ -418,3 +418,26 @@ def test_lint_fusionspec_build_kwarg():
                for p in problems), problems
     assert lint.lint_sources({"core/ring.py": RING_SRC,
                               "core/workflow.py": good}) == []
+
+
+def test_lint_serving_jit_discipline():
+    """Check 7: jax.jit on the serving surface (outside serving/cache.py)
+    is flagged; the blessed cache module and non-serving modules are not."""
+    bad = ("import jax\n"
+           "def make_step(fn):\n"
+           "    return jax.jit(fn)\n")
+    for rel in ("serving/engine.py", "serving/service.py",
+                "launch/serve.py"):
+        problems = lint.lint_sources({"core/ring.py": RING_SRC, rel: bad})
+        assert any("warm executable pool" in p and rel in p
+                   for p in problems), (rel, problems)
+    # blessed: the compile-cache module itself, and modules off the surface
+    for rel in ("serving/cache.py", "core/workflow.py", "launch/train.py"):
+        assert lint.lint_sources({"core/ring.py": RING_SRC,
+                                  rel: bad}) == [], rel
+    # routing through jit_compile satisfies the check
+    good = ("from .cache import jit_compile\n"
+            "def make_step(fn):\n"
+            "    return jit_compile(fn)\n")
+    assert lint.lint_sources({"core/ring.py": RING_SRC,
+                              "serving/engine.py": good}) == []

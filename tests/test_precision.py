@@ -391,3 +391,100 @@ def test_cadence_composes_with_chunked_scan_and_checkpoint(tmp_path):
     for a, b in zip(jax.tree.leaves(s_chunk["gen"]),
                     jax.tree.leaves(s_res["gen"])):
         np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# ----------------------------------------------------------------------------
+# property tests: FusionSpec pack/unpack over arbitrary layouts (ISSUE 8 —
+# generalizing the fixed generator-shaped cases above)
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:
+    from _hypothesis_compat import given, settings, strategies as st
+
+
+def _random_tree(n_leaves, dims, masks, seed):
+    """A pytree of `n_leaves` fp32 leaves with drawn shapes + bool mask.
+
+    Shapes come from the drawn `dims` list (rank 0-2); `masks` decides
+    which leaves ride the payload.  At least one leaf is forced masked so
+    the payload is never empty (the engine always syncs something)."""
+    rng = np.random.default_rng(seed)
+    leaves, mask = {}, {}
+    for i in range(n_leaves):
+        rank = dims[3 * i] % 3
+        shape = tuple(d + 1 for d in dims[3 * i + 1: 3 * i + 1 + rank])
+        leaves[f"l{i}"] = jnp.asarray(
+            rng.standard_normal(shape), jnp.float32)
+        mask[f"l{i}"] = bool(masks[i]) or i == 0
+    return leaves, mask
+
+
+@settings(max_examples=25)
+@given(st.integers(1, 5),
+       st.lists(st.integers(0, 6), min_size=15, max_size=15),
+       st.lists(st.booleans(), min_size=5, max_size=5),
+       st.sampled_from(["fp32", "bf16"]),
+       st.integers(0, 10_000))
+def test_fusionspec_roundtrip_property(n_leaves, dims, masks, precision,
+                                       seed):
+    """flatten -> unflatten round-trips ANY leaf layout: masked leaves come
+    back at master fp32 (bitwise at fp32 wire; within one bf16 rounding at
+    bf16 wire), unmasked leaves pass through untouched, and the payload
+    carries exactly the masked element count at the wire dtype."""
+    tree, mask = _random_tree(n_leaves, dims, masks, seed)
+    spec = sync_lib.FusionSpec.build(
+        tree, mask, payload_dtype=sync_lib.payload_dtype_of(precision))
+
+    payload = spec.flatten(tree, stacked=False)
+    assert payload.dtype == spec.payload_dtype
+    assert payload.shape == (sum(
+        v.size for k, v in tree.items() if mask[k]),)
+
+    zeros = jax.tree.map(jnp.zeros_like, tree)
+    back = spec.unflatten(payload, zeros, stacked=False)
+    for k in tree:
+        assert back[k].dtype == jnp.float32          # master dtype restored
+        if not mask[k]:
+            np.testing.assert_array_equal(np.asarray(back[k]), 0.0)
+        elif precision == "fp32":
+            np.testing.assert_array_equal(np.asarray(back[k]),
+                                          np.asarray(tree[k]))
+        else:                                        # one bf16 rounding
+            np.testing.assert_array_equal(
+                np.asarray(back[k]),
+                np.asarray(tree[k].astype(jnp.bfloat16)
+                           .astype(jnp.float32)))
+
+
+@settings(max_examples=10)
+@given(st.integers(1, 4),
+       st.lists(st.integers(0, 6), min_size=15, max_size=15),
+       st.lists(st.booleans(), min_size=5, max_size=5),
+       st.sampled_from(["fp32", "bf16"]),
+       st.integers(2, 5))
+def test_fusionspec_roundtrip_property_stacked(n_leaves, dims, masks,
+                                               precision, n_ranks):
+    """The stacked [R, ...] layout round-trips identically: per-rank rows
+    of the [R, D] payload are independent (rank r's row reconstructs rank
+    r's leaves and nothing else)."""
+    tree1, mask = _random_tree(n_leaves, dims, masks, seed=7)
+    stacked = jax.tree.map(
+        lambda x: jnp.stack([x * (r + 1) for r in range(n_ranks)]), tree1)
+    spec = sync_lib.FusionSpec.build(
+        tree1, mask, payload_dtype=sync_lib.payload_dtype_of(precision))
+
+    payload = spec.flatten(stacked, stacked=True)
+    assert payload.shape == (n_ranks, spec.total)
+    back = spec.unflatten(payload, jax.tree.map(jnp.zeros_like, stacked),
+                          stacked=True)
+    for k in tree1:
+        for r in range(n_ranks):
+            want = np.asarray(stacked[k][r])
+            if precision == "bf16":
+                want = np.asarray(stacked[k][r].astype(jnp.bfloat16)
+                                  .astype(jnp.float32))
+            got = np.asarray(back[k][r] if mask[k]
+                             else jnp.zeros_like(stacked[k][r]))
+            np.testing.assert_array_equal(
+                got, want if mask[k] else np.zeros_like(want))
