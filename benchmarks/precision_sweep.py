@@ -37,7 +37,15 @@ import numpy as np
 from .common import save_result
 from .weak_scaling import GPUS_PER_NODE
 
-LANES = [("fp32", 1), ("fp32", 2), ("bf16", 1), ("bf16", 2)]
+# (payload_precision, disc_every, disc_compute) — the ISSUE 7 wire-precision
+# x cadence grid (all at fp32 discriminator compute), plus the ISSUE 9
+# disc-compute lanes: bf16 forward matmuls inside the discriminator behind
+# `WorkflowConfig.disc_compute`, once isolated (fp32 wire, every-epoch
+# cadence — the pure effect of the cast) and once composed with the full
+# throughput recipe (bf16 wire + disc_every=2)
+LANES = [("fp32", 1, "fp32"), ("fp32", 2, "fp32"),
+         ("bf16", 1, "fp32"), ("bf16", 2, "fp32"),
+         ("fp32", 1, "bf16"), ("bf16", 2, "bf16")]
 SCHEDULES = ("sync", "overlap", "adaptive")
 
 
@@ -69,7 +77,7 @@ def run(ranks=(4, 8, 16), schedules=SCHEDULES, h=25, n_epochs=12, warmup=4,
         dpr = jnp.stack([data[:1000]] * R)
         for schedule in schedules:
             base = {}                      # (R, schedule) fp32 reference rows
-            for precision, disc_every in LANES:
+            for precision, disc_every, disc_compute in LANES:
                 sync_kw = dict(mode="rma_arar_arar", h=h, fuse_tensors=True,
                                payload_precision=precision,
                                overlap=schedule == "overlap",
@@ -79,7 +87,8 @@ def run(ranks=(4, 8, 16), schedules=SCHEDULES, h=25, n_epochs=12, warmup=4,
                 wcfg = WorkflowConfig(sync=SyncConfig(**sync_kw),
                                       n_param_samples=32,
                                       events_per_sample=25, problem=problem,
-                                      disc_every=disc_every)
+                                      disc_every=disc_every,
+                                      disc_compute=disc_compute)
                 state = workflow.init_state(jax.random.PRNGKey(seed), R,
                                             wcfg)
                 fn = workflow.make_chunk_fn_vmap(n_outer, n_inner, wcfg, 1)
@@ -100,9 +109,11 @@ def run(ranks=(4, 8, 16), schedules=SCHEDULES, h=25, n_epochs=12, warmup=4,
                 residual = float(prob.mean_abs_residual(p_hat))
                 row = {"ranks": R, "problem": problem, "schedule": schedule,
                        "backend": "vmap", "precision": precision,
-                       "disc_every": disc_every, "epoch_s": best,
+                       "disc_every": disc_every,
+                       "disc_compute": disc_compute, "epoch_s": best,
                        "residual": residual}
-                if (precision, disc_every) == ("fp32", 1):
+                if (precision, disc_every, disc_compute) == \
+                        ("fp32", 1, "fp32"):
                     base = row
                 else:
                     row["speedup_vs_fp32"] = base["epoch_s"] / best
@@ -115,6 +126,7 @@ def run(ranks=(4, 8, 16), schedules=SCHEDULES, h=25, n_epochs=12, warmup=4,
                     extra = (f"  {row['speedup_vs_fp32']:.2f}x fp32/de1, "
                              f"res x{row['residual_ratio_vs_fp32']:.2f}")
                 print(f"  R={R:3d} {schedule:8s} {precision} de={disc_every}"
+                      f" dc={disc_compute}"
                       f"  {best * 1e3:8.2f} ms/epoch  |r|={residual:.4f}"
                       + extra, flush=True)
 
@@ -132,23 +144,25 @@ def run(ranks=(4, 8, 16), schedules=SCHEDULES, h=25, n_epochs=12, warmup=4,
 
 
 def check(payload, bar_s=0.187):
-    """The acceptance predicate over a sweep payload: bf16 residuals within
-    2x their fp32 counterparts, and the bf16+cadence R=16 vmap lane under
-    `bar_s` (the fused fp32 epoch bar from BENCH_weak_scaling.json)."""
-    by_key = {(r["ranks"], r["schedule"], r["precision"], r["disc_every"]): r
-              for r in payload["rows"]}
+    """The acceptance predicate over a sweep payload: every reduced-
+    precision lane's residual (bf16 wire, bf16 disc compute, or both)
+    within 2x of the all-fp32 lane at the same cadence, and the
+    bf16+cadence R=16 vmap lane under `bar_s` (the fused fp32 epoch bar
+    from BENCH_weak_scaling.json)."""
+    by_key = {(r["ranks"], r["schedule"], r["precision"], r["disc_every"],
+               r.get("disc_compute", "fp32")): r for r in payload["rows"]}
     ok = True
-    for (R, sched, prec, de), r in by_key.items():
-        if prec != "bf16":
+    for (R, sched, prec, de, dc), r in by_key.items():
+        if prec == "fp32" and dc == "fp32":
             continue
-        ref = by_key.get((R, sched, "fp32", de))
+        ref = by_key.get((R, sched, "fp32", de, "fp32"))
         if ref is None or ref["residual"] <= 0:
             continue
         if r["residual"] > 2.0 * ref["residual"]:
-            print(f"FAIL residual: R={R} {sched} de={de} bf16 "
+            print(f"FAIL residual: R={R} {sched} de={de} {prec}/dc={dc} "
                   f"{r['residual']:.4f} > 2x fp32 {ref['residual']:.4f}")
             ok = False
-    fast = by_key.get((16, "sync", "bf16", 2))
+    fast = by_key.get((16, "sync", "bf16", 2, "fp32"))
     if fast is not None and fast["epoch_s"] >= bar_s:
         print(f"FAIL throughput: bf16+de2 R=16 {fast['epoch_s'] * 1e3:.1f} "
               f"ms >= bar {bar_s * 1e3:.0f} ms")

@@ -94,11 +94,11 @@ def main():
 # per-sync-mode bytes/FLOPs report (ISSUE 7 evidence gate)
 
 SYNC_COLS = ["mode", "schedule", "precision", "disc_every", "flops_epoch",
-             "collective_bytes", "cross_pod_bytes", "wire_dtypes",
-             "collective_ops"]
+             "payload_bytes", "segments", "collective_bytes",
+             "cross_pod_bytes", "wire_dtypes", "collective_ops"]
 
 
-def _cadence_flops(disc_every: int) -> float:
+def _cadence_flops(disc_every: int, problem: str = "proxy1d") -> float:
     """Steady-state per-rank FLOPs of the gradient phase under `disc_every`:
     a (1/de) mix of the full branch and the gen-only branch, costed from
     their OWN lowerings (the branches of the epoch's lax.cond)."""
@@ -114,7 +114,8 @@ def _cadence_flops(disc_every: int) -> float:
     from repro.problems import get_problem
 
     wcfg = WorkflowConfig(sync=SyncConfig(mode="rma_arar_arar", h=2),
-                          n_param_samples=64, events_per_sample=25)
+                          n_param_samples=64, events_per_sample=25,
+                          problem=problem)
     state = jax.eval_shape(
         lambda k: workflow.init_rank_state(k, wcfg, workflow.make_schedule(
             wcfg)), jax.random.PRNGKey(0))
@@ -132,25 +133,62 @@ def _cadence_flops(disc_every: int) -> float:
     return w * full + (1.0 - w) * gen_only
 
 
+def _payload_info(precision="fp32", ring_chunking=0, problem="proxy1d"):
+    """Per-exchange fused ring payload shape from the driver's own
+    FusionSpec — the authoritative 'what rides the ring' numbers
+    (`payload_bytes` = D x wire-dtype itemsize, `segments` = chunked-ring
+    segment count under `ring_chunking`).  The compiled-HLO collective
+    bytes aggregate EVERY collective over the whole epoch (mailbox
+    bundles, controller pmeans, outer-ring hops), so they cannot answer
+    'how big is one ring deposit' — the spec can."""
+    import sys as _sys
+    _sys.path.insert(0, os.path.join(os.path.dirname(
+        os.path.dirname(os.path.abspath(__file__))), "src"))
+    import jax.numpy as jnp
+    from repro.core import workflow
+    from repro.core.sync import SyncConfig
+    from repro.core.workflow import WorkflowConfig
+
+    wcfg = WorkflowConfig(sync=SyncConfig(mode="rma_arar_arar", h=2,
+                                          payload_precision=precision,
+                                          ring_chunking=ring_chunking),
+                          problem=problem)
+    spec = workflow.make_schedule(wcfg).spec
+    return {"payload_bytes":
+                spec.total * jnp.dtype(spec.payload_dtype).itemsize,
+            "segments": spec.n_segments}
+
+
 def sync_mode_report(R=8, h=2, precisions=("fp32", "bf16"),
-                     disc_everys=(1, 2), out="precision_roofline"):
+                     disc_everys=(1, 2), out="precision_roofline",
+                     ring_chunking=524288, problem="proxy1d"):
     """Compiled-HLO cost rows per (mode x schedule x precision), plus the
-    cadence FLOPs mix — written to results/<out>.json and .md."""
+    cadence FLOPs mix — written to results/<out>.json and .md.  Ring-mode
+    rows carry the FusionSpec-derived per-exchange `payload_bytes` and
+    chunk `segments` (see `_payload_info`); the `chunked` schedule row
+    lowers the rma epoch with `ring_chunking`-byte segmentation."""
     from .weak_scaling import lower_epoch
 
-    grid = [("allreduce", "sync"), ("conv_arar", "sync"),
-            ("arar_arar", "sync"), ("dbtree", "sync"),
-            ("rma_arar_arar", "sync"), ("rma_arar_arar", "overlap"),
-            ("rma_arar_arar", "adaptive")]
+    grid = [("allreduce", "sync", 0), ("conv_arar", "sync", 0),
+            ("arar_arar", "sync", 0), ("dbtree", "sync", 0),
+            ("rma_arar_arar", "sync", 0),
+            ("rma_arar_arar", "chunked", ring_chunking),
+            ("rma_arar_arar", "overlap", 0),
+            ("rma_arar_arar", "adaptive", 0)]
     ring = ("conv_arar", "arar_arar", "rma_arar_arar", "dbtree")
-    cadence_flops = {de: _cadence_flops(de) for de in disc_everys}
+    cadence_flops = {de: _cadence_flops(de, problem) for de in disc_everys}
     rows_out = []
-    for mode, schedule in grid:
+    for mode, schedule, chunk in grid:
         for prec in precisions:
             if prec != "fp32" and mode not in ring:
                 continue                 # bf16 is a ring-payload knob
-            rep = lower_epoch(R, mode, h, fuse=True, schedule=schedule,
-                              precision=prec)
+            pinfo = _payload_info(prec, chunk, problem) if mode in ring \
+                else {"payload_bytes": None, "segments": None}
+            rep = lower_epoch(R, mode, h, fuse=True,
+                              schedule="sync" if schedule == "chunked"
+                              else schedule,
+                              precision=prec, ring_chunking=chunk,
+                              problem=problem)
             # Wire dtypes come from the pre-optimization StableHLO: the XLA
             # *CPU* backend's float-normalization widens bf16 collectives to
             # f32 in the compiled module (convert / f32 permute / convert),
@@ -163,6 +201,8 @@ def sync_mode_report(R=8, h=2, precisions=("fp32", "bf16"),
                     "mode": mode, "schedule": schedule, "precision": prec,
                     "disc_every": de,
                     "flops_epoch": cadence_flops[de],
+                    "payload_bytes": pinfo["payload_bytes"],
+                    "segments": pinfo["segments"],
                     "collective_bytes": rep["total_collective_bytes"],
                     "cross_pod_bytes": rep["cross_pod_bytes"],
                     "wire_dtypes": ",".join(
@@ -174,6 +214,7 @@ def sync_mode_report(R=8, h=2, precisions=("fp32", "bf16"),
                   f"({rows_out[-1]['wire_dtypes']})", flush=True)
 
     payload = {"benchmark": "precision_roofline", "R": R, "h": h,
+               "problem": problem, "ring_chunking": ring_chunking,
                "per_rank": True,
                "cadence_flops": {str(k): v
                                  for k, v in cadence_flops.items()},
@@ -209,8 +250,13 @@ if __name__ == "__main__":
                          "instead of the dry-run roofline table")
     ap.add_argument("--ranks", type=int, default=8)
     ap.add_argument("--out", default="precision_roofline")
+    ap.add_argument("--problem", default="proxy1d",
+                    help="registered problem to lower (the imaging family "
+                         "is where `segments` exceeds 1 — megabyte payload)")
     a = ap.parse_args()
     if a.sync_modes:
-        sync_mode_report(R=a.ranks, out=a.out)
+        out = a.out if a.problem == "proxy1d" else \
+            f"{a.out}_{a.problem}"
+        sync_mode_report(R=a.ranks, out=out, problem=a.problem)
     else:
         main()

@@ -58,6 +58,7 @@ problem = sys.argv[5] if len(sys.argv) > 5 else "proxy1d"
 schedule = sys.argv[6] if len(sys.argv) > 6 else "sync"
 precision = sys.argv[7] if len(sys.argv) > 7 else "fp32"
 disc_every = int(sys.argv[8]) if len(sys.argv) > 8 else 1
+ring_chunking = int(sys.argv[9]) if len(sys.argv) > 9 else 0
 n_outer = max(R // %d, 1); n_inner = min(R, %d)
 from repro.launch.mesh import make_mesh
 mesh = make_mesh((n_outer, n_inner), ("pod", "data"))
@@ -66,7 +67,8 @@ wcfg = WorkflowConfig(sync=SyncConfig(mode=mode, h=h, fuse_tensors=fuse,
                                       adaptive=schedule == "adaptive",
                                       staleness=4 if schedule == "adaptive"
                                       else 1,
-                                      payload_precision=precision),
+                                      payload_precision=precision,
+                                      ring_chunking=ring_chunking),
                       n_param_samples=64, events_per_sample=25,
                       problem=problem, disc_every=disc_every)
 fn, shardings = workflow.make_epoch_fn_shard(mesh, wcfg)
@@ -105,10 +107,11 @@ print("RESULT " + json.dumps(rep))
 
 def lower_epoch(R: int, mode: str, h: int, fuse: bool = False,
                 problem: str = "proxy1d", schedule: str = "sync",
-                precision: str = "fp32", disc_every: int = 1) -> dict:
+                precision: str = "fp32", disc_every: int = 1,
+                ring_chunking: int = 0) -> dict:
     out = subprocess.run([sys.executable, "-c", _CHILD, str(R), mode, str(h),
                           "fuse" if fuse else "nofuse", problem, schedule,
-                          precision, str(disc_every)],
+                          precision, str(disc_every), str(ring_chunking)],
                          capture_output=True, text=True, timeout=600,
                          cwd=os.path.dirname(os.path.dirname(__file__)))
     for line in out.stdout.splitlines():
@@ -163,10 +166,87 @@ def model_epoch_time(rep: dict, mode: str, h: int, t_compute: float,
     return t_compute + t_comm + LAT * n_ops
 
 
+def measure_exchange_rows(problem="imaging", ranks=(8, 16), h=25,
+                          ring_chunking=524288, reps=8, n_iters=50):
+    """Exchange-ONLY wall time: the fused ring transfer in isolation (no
+    GAN compute), flat vs chunked payload, on the vmap simulator.
+
+    This is the direct evidence lane for `SyncConfig.ring_chunking`: the
+    full-epoch lanes of `measure_fused_wall_time` bury the exchange under
+    the generator/discriminator compute (on the megabyte imaging payloads
+    the conv generator dominates), so the chunked win there sits inside
+    rep noise.  Here each row times `schedule.exchange` alone — same
+    driver-built schedule, same VmapComm — and records the payload's wire
+    shape from the FusionSpec.  Best-of-`reps` minima, the timeit
+    convention.  Rows carry `exchange_s_fused` / `exchange_s_chunked` /
+    `chunked_speedup`; a payload below one segment degenerates to the
+    identical flat program (toy problems: speedup ~1.0 by construction,
+    which is the 'no slower at toy scale' guard)."""
+    import time
+
+    import jax
+    import jax.numpy as jnp
+
+    sys.path.insert(0, os.path.join(os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))), "src"))
+    from repro.core import workflow
+    from repro.core.ring import VmapComm
+    from repro.core.sync import SyncConfig
+    from repro.core.workflow import WorkflowConfig
+
+    rows = []
+    for R in ranks:
+        n_inner = min(R, GPUS_PER_NODE)
+        n_outer = max(R // n_inner, 1)
+        comm = VmapComm(n_outer, n_inner)
+        per, spec_c = {}, None
+        for lane, chunk in (("fused", 0), ("chunked", ring_chunking)):
+            wcfg = WorkflowConfig(
+                sync=SyncConfig(mode="rma_arar_arar", h=h,
+                                ring_chunking=chunk), problem=problem)
+            sched = workflow.make_schedule(wcfg)
+            if chunk:
+                spec_c = sched.spec
+            st = sched.init_state(R)
+            g = sched._grads_example(R)
+            g = jax.tree.map(lambda x: jnp.full(x.shape, 0.5, x.dtype), g)
+            fn = jax.jit(lambda g, st, e: sched.exchange(comm, g, st, e))
+            o, _ = fn(g, st, 0)
+            jax.block_until_ready(o)
+            best = float("inf")
+            for _ in range(reps):
+                t0 = time.perf_counter()
+                s = st
+                for e in range(n_iters):
+                    o, s = fn(g, s, e)
+                jax.block_until_ready(o)
+                best = min(best, (time.perf_counter() - t0) / n_iters)
+            per[lane] = best
+        row = {"ranks": R, "problem": problem, "schedule": "sync",
+               "backend": "vmap", "lane": "exchange_only",
+               "payload_bytes":
+                   spec_c.total * jnp.dtype(spec_c.payload_dtype).itemsize,
+               "ring_chunking": ring_chunking,
+               "segments": spec_c.n_segments,
+               "exchange_s_fused": per["fused"],
+               "exchange_s_chunked": per["chunked"],
+               "chunked_speedup": per["fused"] / per["chunked"]}
+        rows.append(row)
+        print(f"  R={R:4d} {problem:12s} exchange-only: flat "
+              f"{per['fused']*1e6:8.1f} us  chunked "
+              f"{per['chunked']*1e6:8.1f} us "
+              f"({row['chunked_speedup']:.2f}x, {row['segments']} seg of "
+              f"{ring_chunking} B)", flush=True)
+    return rows
+
+
 def measure_fused_wall_time(ranks=(4, 8, 16), h=25, n_epochs=30,
                             warmup=5, out_path=None, problem="proxy1d",
                             sync_mode="sync", reps=3, max_staleness=4,
-                            backend="vmap", proc_ranks=(2,)):
+                            backend="vmap", proc_ranks=(2,),
+                            ring_chunking=524288,
+                            exchange_problems=("proxy1d", "imaging"),
+                            provenance=None):
     """Measured (not modeled) per-epoch wall time, fused vs unfused ring
     payload, on the vmap rank simulator of this host; sync_mode='overlap'
     adds a lane measuring the overlapped pod-boundary schedule (fused
@@ -210,6 +290,13 @@ def measure_fused_wall_time(ranks=(4, 8, 16), h=25, n_epochs=30,
 
     lanes = [("unfused", dict(fuse_tensors=False)),
              ("fused", dict(fuse_tensors=True))]
+    if ring_chunking:
+        # chunked ring lane (ISSUE 9): same fused payload, moved as
+        # `ring_chunking`-byte pipelined segments.  On toy payloads below
+        # one segment this degenerates to the fused lane (same compiled
+        # module); the megabyte imaging payloads are where the split pays.
+        lanes.append(("chunked", dict(fuse_tensors=True,
+                                      ring_chunking=ring_chunking)))
     if sync_mode in ("overlap", "adaptive"):
         lanes.append(("overlap", dict(fuse_tensors=True, overlap=True)))
     if sync_mode == "adaptive":
@@ -241,14 +328,30 @@ def measure_fused_wall_time(ranks=(4, 8, 16), h=25, n_epochs=30,
                 jax.block_until_ready(m)
                 best = min(best, (time.perf_counter() - t0) / n_epochs)
             per_lane[lane] = best
+        # wire-payload shape of the fused exchange, from the driver's own
+        # FusionSpec (what the ring actually moves, incl. segmentation)
+        spec = workflow.make_schedule(WorkflowConfig(
+            sync=SyncConfig(mode="rma_arar_arar", h=h, fuse_tensors=True,
+                            ring_chunking=ring_chunking),
+            n_param_samples=32, events_per_sample=25, problem=problem)).spec
         row = {"ranks": R, "problem": problem, "schedule": sync_mode,
                "backend": "vmap",
+               "payload_bytes":
+                   spec.total * jnp.dtype(spec.payload_dtype).itemsize,
+               "ring_chunking": ring_chunking,
+               "segments": spec.n_segments,
                "epoch_s_unfused": per_lane["unfused"],
                "epoch_s_fused": per_lane["fused"],
                "fused_speedup": per_lane["unfused"] / per_lane["fused"]}
         msg = (f"  R={R:4d} unfused {per_lane['unfused']*1e3:8.2f} ms  "
                f"fused {per_lane['fused']*1e3:8.2f} ms  "
                f"speedup {row['fused_speedup']:.2f}x")
+        if "chunked" in per_lane:
+            row["epoch_s_chunked"] = per_lane["chunked"]
+            row["chunked_vs_fused"] = per_lane["chunked"] / per_lane["fused"]
+            msg += (f"  chunked {per_lane['chunked']*1e3:8.2f} ms "
+                    f"({row['chunked_vs_fused']:.2f}x fused, "
+                    f"{row['segments']} seg)")
         if "overlap" in per_lane:
             row["epoch_s_overlap"] = per_lane["overlap"]
             row["overlap_vs_fused"] = per_lane["overlap"] / per_lane["fused"]
@@ -299,12 +402,23 @@ def measure_fused_wall_time(ranks=(4, 8, 16), h=25, n_epochs=30,
                   f"{epoch_s * 1e3:8.2f} ms/epoch  "
                   f"distributed={rows[-1]['distributed']}", flush=True)
 
+    # exchange-only evidence rows for the chunked ring (ISSUE 9): the
+    # megabyte imaging payload at R >= 8 is where segmentation must win;
+    # the toy payload degenerates to the identical flat program
+    for xprob in exchange_problems:
+        rows.extend(measure_exchange_rows(
+            xprob, ranks=tuple(r for r in ranks if r >= 8) or ranks,
+            h=h, ring_chunking=ring_chunking))
+
     payload = {"benchmark": "weak_scaling_fused_exchange",
                "mode": "rma_arar_arar", "h": h, "n_epochs": n_epochs,
                "reps": reps, "problem": problem, "sync_mode": sync_mode,
+               "ring_chunking": ring_chunking,
                "max_staleness": max_staleness if sync_mode == "adaptive"
                else None,
                "jax_platform": jax.default_backend(), "rows": rows}
+    if provenance:
+        payload["provenance"] = provenance
     save_result("weak_scaling_fusion", payload)
     root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
     with open(out_path or os.path.join(root, "BENCH_weak_scaling.json"),

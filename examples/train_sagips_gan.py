@@ -54,9 +54,14 @@ def report_final(problem, gen_stack, data):
     p_hat, sigma = ensemble_response(gen_stack, noise)
     truth = np.asarray(problem.true_params())
     print("\nfinal ensemble prediction vs truth:")
-    for i in range(problem.n_params):
+    show = min(problem.n_params, 16)    # image-valued problems have 1000+
+    for i in range(show):
         print(f"  p{i}: {float(p_hat[i]):.4f} ± {float(sigma[i]):.4f} "
               f"(truth {float(truth[i]):.4f})")
+    if show < problem.n_params:
+        err = np.abs(np.asarray(p_hat) - truth)
+        print(f"  ... {problem.n_params - show} more: "
+              f"mean|p̂-p*|={err.mean():.4f} max={err.max():.4f}")
 
     solve = make_solver(problem, SolveConfig())
     n = min(int(data.shape[0]), 1024)
@@ -106,6 +111,11 @@ def main():
     ap.add_argument("--max-staleness", type=int, default=4,
                     help="adaptive schedule: widest effective read depth "
                          "k_max the controller may reach")
+    ap.add_argument("--ring-chunking", type=int, default=0,
+                    help="fused ring payload segment size in BYTES "
+                         "(0 = unchunked); megabyte payloads — the "
+                         "imaging family's conv generator — pipeline "
+                         "as ceil(payload/SIZE) per-segment transfers")
     ap.add_argument("--no-fuse", action="store_true",
                     help="disable the fused single-buffer ring payload")
     ap.add_argument("--payload-precision", choices=("fp32", "bf16"),
@@ -158,10 +168,15 @@ def main():
                         else args.staleness,
                         fuse_tensors=not args.no_fuse,
                         overlap=overlap, adaptive=adaptive,
-                        payload_precision=args.payload_precision),
+                        payload_precision=args.payload_precision,
+                        ring_chunking=args.ring_chunking),
         n_param_samples=args.param_samples, events_per_sample=25,
         gen_lr=2e-4, disc_lr=5e-4, problem=args.problem,
         disc_every=args.disc_every, gen_every=args.gen_every)
+    # image-valued problems (conv generator path) retune the proxy-scale
+    # settings — batch shape + capped generator step; identity otherwise
+    from repro.configs import sagips_gan
+    wcfg = sagips_gan.for_problem(args.problem, wcfg)
 
     data = problem.make_reference_data(jax.random.PRNGKey(99), args.events)
 

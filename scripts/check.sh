@@ -6,11 +6,15 @@
 #                                    # tests (subprocess mesh equivalence,
 #                                    # end-to-end workflow convergence)
 #   scripts/check.sh --problems      # problems lane: per-problem smoke tests
-#                                    # (registry, gradient flow, fused/unfused
-#                                    # parity, golden proxy1d regression)
+#                                    # (registry incl. the imaging family,
+#                                    # gradient flow, fused/unfused parity,
+#                                    # golden proxy1d regression) + the
+#                                    # Pallas-kernel-vs-jnp-oracle agreement
+#                                    # suite (tests/test_kernels.py)
 #   scripts/check.sh --sync          # sync lane: strategy + overlap +
 #                                    # SyncSchedule/adaptive-staleness tests
-#                                    # on their own
+#                                    # + chunked-ring bitwise parity
+#                                    # (tests/test_chunked_ring.py)
 #   scripts/check.sh --runtime       # runtime lane: the multi-process
 #                                    # proc backend (mailbox fabric units +
 #                                    # 2-process jax.distributed parity and
@@ -42,13 +46,14 @@ cd "$(dirname "$0")/.."
 if [[ "${1:-}" == "--problems" ]]; then
     shift
     exec env PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
-        python -m pytest -x -q tests/test_problems.py "$@"
+        python -m pytest -x -q tests/test_problems.py tests/test_kernels.py \
+        "$@"
 fi
 if [[ "${1:-}" == "--sync" ]]; then
     shift
     exec env PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
         python -m pytest -x -q tests/test_sync.py tests/test_overlap.py \
-        tests/test_schedule.py "$@"
+        tests/test_schedule.py tests/test_chunked_ring.py "$@"
 fi
 if [[ "${1:-}" == "--runtime" ]]; then
     shift

@@ -45,6 +45,12 @@ over `src/repro`.
      come from `jit_compile` / `CompileCache.get`, so a new code path
      cannot silently bypass the warm executable pool and reintroduce
      per-request compiles.
+  8. Pallas kernel oracles — every public `kernels/` entry point that
+     launches a `pallas_call` must register a `<name>_ref` jnp oracle in
+     `kernels/ref.py`, and (when the tests/ corpus is supplied) an
+     agreement test must exercise kernel and oracle side by side; a
+     kernel without its oracle pair cannot be validated on CPU hosts and
+     can drift silently on accelerator ones.
 
 Exit status is the number of problems found (0 == clean), matching
 `scripts/docs_lint.py` so the lanes compose.
@@ -68,6 +74,7 @@ TRACED_CORE = [
     "core/residuals.py", "core/pipeline.py",
     "kernels/ops.py", "kernels/inverse_cdf.py", "kernels/ref.py",
     "kernels/flash_attention.py", "kernels/ssd_scan.py",
+    "kernels/imaging.py",
 ]
 
 
@@ -422,11 +429,67 @@ def check_serving_jit(rel: str, tree: ast.AST, problems: List[str]):
 
 
 # ---------------------------------------------------------------------------
+# 8. Pallas kernel discipline — every kernel entry point needs a jnp oracle
+
+KERNELS_REF = "kernels/ref.py"
 
 
-def lint_sources(sources: Dict[str, str]) -> List[str]:
+def _pallas_entry_points(tree: ast.AST) -> List[str]:
+    """Public module-level functions whose bodies launch a pallas_call —
+    the kernel entry points the oracle contract binds to."""
+    out = []
+    for fn in getattr(tree, "body", []):
+        if not isinstance(fn, ast.FunctionDef) or fn.name.startswith("_"):
+            continue
+        for call in ast.walk(fn):
+            if not isinstance(call, ast.Call):
+                continue
+            c = _chain(call.func)
+            if c and (c[1][-1:] == ["pallas_call"]
+                      or (not c[1] and c[0] == "pallas_call")):
+                out.append(fn.name)
+                break
+    return out
+
+
+def check_kernel_oracles(trees: Dict[str, ast.AST], problems: List[str],
+                         test_sources: Optional[Dict[str, str]] = None):
+    """Every Pallas kernel entry point under kernels/ must have (a) a
+    `<name>_ref` jnp oracle registered in kernels/ref.py and (b), when the
+    test corpus is supplied, an agreement test exercising both sides —
+    an unpinned kernel is unverifiable on CPU hosts and silently
+    divergeable on accelerator ones."""
+    ref_tree = trees.get(KERNELS_REF)
+    refs = {fn.name for fn in getattr(ref_tree, "body", [])
+            if isinstance(fn, ast.FunctionDef)} if ref_tree else set()
+    tests = "\n".join((test_sources or {}).values())
+    for rel, tree in trees.items():
+        if not rel.startswith("kernels/") or rel == KERNELS_REF:
+            continue
+        for name in _pallas_entry_points(tree):
+            oracle = f"{name}_ref"
+            if oracle not in refs:
+                problems.append(
+                    f"{rel}: Pallas kernel `{name}` has no jnp oracle — "
+                    f"register `{oracle}` in {KERNELS_REF}")
+            elif test_sources is not None and not (
+                    f"{name}(" in tests and oracle in tests):
+                problems.append(
+                    f"{rel}: Pallas kernel `{name}` has an oracle but no "
+                    f"agreement test — add a tests/ case comparing "
+                    f"`{name}(...)` against `ref.{oracle}(...)`")
+
+
+# ---------------------------------------------------------------------------
+
+
+def lint_sources(sources: Dict[str, str],
+                 test_sources: Optional[Dict[str, str]] = None) -> List[str]:
     """Run every check over {repo-relative-module: source}; returns the
-    problem list.  Pure — tests feed synthetic sources through this."""
+    problem list.  Pure — tests feed synthetic sources through this.
+    `test_sources` (the tests/ corpus) arms the agreement-test half of
+    the kernel-oracle check; None keeps it to the oracle-registration
+    half."""
     problems: List[str] = []
     trees: Dict[str, ast.AST] = {}
     for rel, text in sources.items():
@@ -435,6 +498,7 @@ def lint_sources(sources: Dict[str, str]) -> List[str]:
         except SyntaxError as e:
             problems.append(f"{rel}: unparseable ({e})")
     check_comm_surface(trees, problems)
+    check_kernel_oracles(trees, problems, test_sources)
     for rel, tree in trees.items():
         check_donation(rel, tree, problems)
         if rel in TRACED_CORE:
@@ -461,9 +525,15 @@ def repo_sources() -> Dict[str, str]:
     return out
 
 
+def test_corpus() -> Dict[str, str]:
+    tdir = os.path.join(ROOT, "tests")
+    return {f: open(os.path.join(tdir, f)).read()
+            for f in sorted(os.listdir(tdir)) if f.endswith(".py")}
+
+
 def main() -> int:
     sources = repo_sources()
-    problems = lint_sources(sources)
+    problems = lint_sources(sources, test_corpus())
     for p in problems:
         print(f"repro-lint: {p}")
     print(f"repro-lint: {len(sources)} modules, {len(problems)} problem(s)")

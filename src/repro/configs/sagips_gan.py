@@ -32,11 +32,37 @@ REDUCED = WorkflowConfig(
 )
 
 
+# image-valued problems (conv generator path) retune the presets: the
+# generator is ~6x larger (290k ring weights) and its forward model is a
+# pointwise field readout, so (measured, tests/test_serving.py recipe)
+#  - parameter-sample batches above ~64 only add compute,
+#  - the p(value | position) conditional needs >= ~32 readings per sample
+#    per epoch for the discriminator signal to cover the field, and
+#  - generator steps above 5e-5 overshoot against a positional-feature
+#    discriminator and oscillate instead of converging.
+IMAGE_PARAM_SAMPLES = 64
+IMAGE_EVENTS_PER_SAMPLE = 32
+IMAGE_MAX_GEN_LR = 5e-5
+
+
 def for_problem(problem: str, base: WorkflowConfig = REDUCED) -> WorkflowConfig:
-    """Retarget a preset at another registered inverse problem."""
+    """Retarget a preset at another registered inverse problem.
+
+    Problems that declare an image-valued `param_shape` (conv generator
+    path — `imaging`, `imaging_blur`) additionally rescale the per-epoch
+    batch shape and cap the generator step (see the IMAGE_* constants):
+    the proxy-tuned presets neither cover the readout conditional nor stay
+    stable at proxy learning rates on the megabyte-scale generator."""
     from ..problems import get_problem
-    get_problem(problem)                     # fail fast on unknown names
-    return dataclasses.replace(base, problem=problem)
+    prob = get_problem(problem)              # fail fast on unknown names
+    cfg = dataclasses.replace(base, problem=problem)
+    if prob.param_shape is not None:
+        cfg = dataclasses.replace(
+            cfg,
+            n_param_samples=min(cfg.n_param_samples, IMAGE_PARAM_SAMPLES),
+            events_per_sample=IMAGE_EVENTS_PER_SAMPLE,
+            gen_lr=min(cfg.gen_lr, IMAGE_MAX_GEN_LR))
+    return cfg
 
 
 def throughput(base: WorkflowConfig = REDUCED,

@@ -59,7 +59,14 @@ def mlp_apply(params, x, final_activation=None):
     return x
 
 
-def init_generator(key, n_params=None, dtype=jnp.float32):
+def init_generator(key, n_params=None, dtype=jnp.float32, param_shape=None):
+    """Paper MLP generator, or the conv generator (`models.convgen`) when
+    the problem declares an image-valued `param_shape` (H, W).  The two
+    return structurally distinct pytrees (list vs dict), which is what
+    `generate_params` / `weight_mask` dispatch on."""
+    if param_shape is not None:
+        from ..models.convgen import init_conv_generator
+        return init_conv_generator(key, param_shape, NOISE_DIM, dtype)
     return init_mlp(key, gen_widths(n_params), dtype)
 
 
@@ -69,13 +76,46 @@ def init_discriminator(key, obs_dim=None, dtype=jnp.float32):
 
 def generate_params(gen_params, noise):
     """noise [K, NOISE_DIM] -> parameter samples [K, n_params]
-    (sigmoid-bounded to the problem's unit cube)."""
+    (sigmoid-bounded to the problem's unit cube).  Dispatches on the
+    pytree structure: the conv generator is a dict, the MLP a list —
+    a static Python check, so each structure traces its own program."""
+    if isinstance(gen_params, dict):
+        from ..models.convgen import conv_generator_apply
+        return conv_generator_apply(gen_params, noise)
     return mlp_apply(gen_params, noise, final_activation=jax.nn.sigmoid)
 
 
-def discriminate(disc_params, events):
-    """events [N, obs_dim] -> logits [N]."""
-    return mlp_apply(disc_params, events)[..., 0]
+# discriminator forward compute precisions (ParaGAN's remaining headroom
+# item: run the dominant per-epoch matmuls in bf16, not just the wire)
+DISC_COMPUTE = ("fp32", "bf16")
+
+
+def compute_dtype_of(precision: str):
+    """`WorkflowConfig.disc_compute` -> the dtype `discriminate` casts its
+    forward to; None means "keep the master dtype" (the bitwise-pinned
+    fp32 default takes NO cast, not an identity astype)."""
+    if precision == "fp32":
+        return None
+    if precision == "bf16":
+        return jnp.dtype("bfloat16")
+    raise ValueError(
+        f"unknown disc_compute {precision!r}; expected one of {DISC_COMPUTE}")
+
+
+def discriminate(disc_params, events, compute_dtype=None):
+    """events [N, obs_dim] -> logits [N].
+
+    `compute_dtype` (from `compute_dtype_of`) runs the forward matmuls in
+    a reduced precision — params and activations are cast once on entry
+    and the logits cast back to the master fp32, so losses, gradients and
+    the Adam state stay fp32 ("fp32 master", the same discipline as the
+    bf16 ring payload).  None is the bitwise-pinned default: no casts at
+    all."""
+    if compute_dtype is None:
+        return mlp_apply(disc_params, events)[..., 0]
+    cast = jax.tree.map(lambda p: p.astype(compute_dtype), disc_params)
+    logits = mlp_apply(cast, events.astype(compute_dtype))[..., 0]
+    return logits.astype(jnp.float32)
 
 
 def param_count(params) -> int:
@@ -86,17 +126,17 @@ def param_count(params) -> int:
 # losses (standard GAN with logits; discriminator: real->1, fake->0)
 
 
-def disc_loss(disc_params, real_events, fake_events):
-    lr_ = discriminate(disc_params, real_events)
-    lf_ = discriminate(disc_params, fake_events)
+def disc_loss(disc_params, real_events, fake_events, compute_dtype=None):
+    lr_ = discriminate(disc_params, real_events, compute_dtype)
+    lf_ = discriminate(disc_params, fake_events, compute_dtype)
     loss_real = jnp.mean(jax.nn.softplus(-lr_))          # -log sigmoid(real)
     loss_fake = jnp.mean(jax.nn.softplus(lf_))           # -log(1-sigmoid(fake))
     return loss_real + loss_fake
 
 
-def gen_loss(disc_params, fake_events):
+def gen_loss(disc_params, fake_events, compute_dtype=None):
     """Non-saturating generator loss: maximize log D(fake)."""
-    lf_ = discriminate(disc_params, fake_events)
+    lf_ = discriminate(disc_params, fake_events, compute_dtype)
     return jnp.mean(jax.nn.softplus(-lf_))
 
 
@@ -105,6 +145,10 @@ def weight_mask(params):
 
     The paper restricts the ring transfer to *weight* gradients (bias
     gradients are 1-D tensors known to slow the ring and add no convergence
-    benefit, §V-C).
+    benefit, §V-C).  Dispatches on the pytree structure like
+    `generate_params`: dict -> conv generator, list -> MLP.
     """
+    if isinstance(params, dict):
+        from ..models.convgen import conv_weight_mask
+        return conv_weight_mask(params)
     return [{"w": True, "b": False} for _ in params]

@@ -118,6 +118,29 @@ dtype; the Adam update and optimizer state stay fp32 ("fp32 master").
 bf16 requires `fuse_tensors=True` and a ring mode — the knob names what
 rides the ring, nothing else.
 
+Chunked ring exchange (`SyncConfig.ring_chunking`, ISSUE 9): megabyte-
+scale fused payloads (the imaging problems' ~1.1 MiB conv-generator
+payload) should not cross the ring as one monolithic buffer — the
+classical bandwidth-optimal schedule moves the reduction as pipelined
+reduce-scatter/all-gather SEGMENTS so segment k's transfer overlaps
+segment k-1's combine.  `ring_chunking` is the segment size in BYTES
+(0 = unchunked, the bitwise-pinned default): `FusionSpec` splits the
+flat payload into `ceil(D * itemsize / ring_chunking)` last-axis slices
+(`split_payload`), and the exchange runs on a TUPLE of segments instead
+of one flat array.  Every `Comm` transfer tree-maps leafwise, so each
+segment is its own collective — the SPMD backends emit one
+ppermute/roll per segment (XLA's latency-hiding scheduler interleaves
+them), and the proc runtime's one-sided mailboxes size their mmap
+windows per segment (`ProcComm(window_bytes=...)`), which is the real
+pipelining: the consumer starts reading segment 0 while the producer is
+still serializing segment k.  Mailbox/outer-mailbox STORAGE stays flat
+([D], `join_payload` before every deposit), so depth-k layouts,
+checkpoints and the adaptive [k_max, D] buffer are chunking-agnostic.
+Segmentation composes with bf16 payloads (segment bounds are computed
+in payload-dtype elements), overlap, and adaptive deposits; at fp32 the
+chunked exchange is bitwise-equal to unchunked (pure concatenation of
+elementwise permute+add slices — pinned by tests/test_sync.py).
+
 Per §V-C only *weight* gradients ride the ring; bias gradients stay local
 (pass `mask` from `gan.weight_mask` — leaves where mask=False skip sync).
 Per Algorithm 1 the combine is a *sum* (g_i <- g_i + g_{i-1}); `combine=
@@ -190,6 +213,11 @@ class SyncConfig:
     payload_precision: str = "fp32"  # wire dtype of the fused ring payload
     #                                ('fp32' | 'bf16'); master params and
     #                                optimizer state stay fp32 either way
+    ring_chunking: int = 0         # fused-payload ring segment size in BYTES
+    #                                (0 = one unsegmented payload, the
+    #                                bitwise-pinned default); > 0 moves the
+    #                                flat payload as ceil(bytes/chunk)
+    #                                pipelined reduce-scatter segments
 
     def __post_init__(self):
         if self.mode not in MODES:
@@ -232,6 +260,19 @@ class SyncConfig:
             raise ValueError(
                 "adaptive staleness stores its max-depth mailbox in the "
                 "fused flat [k_max, D] layout; set fuse_tensors=True")
+        if self.ring_chunking < 0:
+            raise ValueError(
+                "ring_chunking is a segment size in bytes (0 = unchunked), "
+                f"got {self.ring_chunking}")
+        if self.ring_chunking and not self.fuse_tensors:
+            raise ValueError(
+                "ring_chunking splits the FUSED flat ring payload into "
+                "pipelined segments; set fuse_tensors=True")
+        if self.ring_chunking and self.mode not in RING_MODES:
+            raise ValueError(
+                "ring_chunking only changes how the fused ring payload "
+                f"crosses the ring; mode={self.mode!r} has no ring payload "
+                f"(ring modes: {RING_MODES})")
 
 
 # ----------------------------------------------------------------------------
@@ -261,9 +302,12 @@ class FusionSpec:
     slots: Tuple[_LeafSlot, ...]
     total: int                     # D = sum of masked per-rank leaf sizes
     payload_dtype: Any = jnp.float32   # dtype of the concatenated payload
+    chunk_bytes: int = 0           # ring segment size in bytes (0 = one
+    #                                unsegmented payload — bitwise default)
 
     @classmethod
-    def build(cls, example, mask, payload_dtype=None) -> "FusionSpec":
+    def build(cls, example, mask, payload_dtype=None,
+              chunk_bytes: int = 0) -> "FusionSpec":
         """`example` is a per-rank pytree (arrays or ShapeDtypeStructs,
         no leading rank axis); `mask` a matching bool pytree.
 
@@ -272,7 +316,10 @@ class FusionSpec:
         None derives it from the masked leaves (historical fp32 behavior).
         The per-leaf slot dtypes always record the MASTER dtypes, so
         `unflatten` can restore the fp32 state regardless of what was
-        shipped."""
+        shipped.  `chunk_bytes` is `cfg.ring_chunking` — the pipelined
+        ring segment size (0 = unchunked); segment bounds are derived
+        lazily in payload-dtype ELEMENTS, so the same byte budget yields
+        twice the elements per segment under bf16."""
         treedef = jax.tree.structure(example)
         slots, off = [], 0
         for m, g in zip(jax.tree.leaves(mask), jax.tree.leaves(example)):
@@ -285,7 +332,8 @@ class FusionSpec:
             masked_dtypes = [s.dtype for s in slots if s.masked]
             payload_dtype = jnp.result_type(*masked_dtypes) if masked_dtypes \
                 else jnp.dtype("float32")
-        return cls(treedef, tuple(slots), off, jnp.dtype(payload_dtype))
+        return cls(treedef, tuple(slots), off, jnp.dtype(payload_dtype),
+                   int(chunk_bytes))
 
     def zero_payload(self, n_ranks: Optional[int] = None):
         """Zero flat ring payload in this spec's layout: [D] per rank, or
@@ -321,6 +369,50 @@ class FusionSpec:
             else:
                 out.append(g)
         return jax.tree.unflatten(self.treedef, out)
+
+    # -- chunked ring segmentation (SyncConfig.ring_chunking, ISSUE 9) -------
+
+    def _per_segment(self) -> int:
+        """Elements per ring segment for this spec's payload dtype."""
+        return max(1, self.chunk_bytes
+                   // jnp.dtype(self.payload_dtype).itemsize)
+
+    @property
+    def n_segments(self) -> int:
+        """Static segment count of the chunked ring exchange: 1 when
+        unchunked (chunk_bytes=0) or empty — the flat single-buffer path —
+        else ceil(D / elements-per-segment).  Python-int static, so the
+        segment tuple's structure is fixed at trace time."""
+        if self.chunk_bytes <= 0 or self.total == 0:
+            return 1
+        per = self._per_segment()
+        return -(-self.total // per)
+
+    def segment_bounds(self) -> Tuple[Tuple[int, int], ...]:
+        """Half-open (start, end) element bounds of every ring segment —
+        contiguous, covering [0, total); the last segment carries the
+        remainder.  Benchmarks (`benchmarks/roofline.py`) report per-mode
+        wire bytes from these bounds."""
+        if self.n_segments == 1:
+            return ((0, self.total),)
+        per = self._per_segment()
+        return tuple((a, min(a + per, self.total))
+                     for a in range(0, self.total, per))
+
+    def split_payload(self, vec):
+        """Flat payload [..., D] -> tuple of last-axis segment slices.
+        The tuple IS the wire format of the chunked exchange: every `Comm`
+        transfer tree-maps leafwise, so each segment moves as its own
+        collective and one-sided backends pipeline per-segment windows."""
+        return tuple(vec[..., a:b] for a, b in self.segment_bounds())
+
+    def join_payload(self, segs):
+        """Inverse of `split_payload` — segments back to the flat [..., D]
+        layout.  Mailboxes and checkpoints always STORE the joined flat
+        payload, so on-disk and depth-k layouts are chunking-agnostic."""
+        if len(segs) == 1:
+            return segs[0]
+        return jnp.concatenate(segs, axis=-1)
 
 
 def _comb(a, b, combine):
@@ -442,17 +534,37 @@ def sync_gradients(comm: Comm, cfg: SyncConfig, grads, mailbox, epoch,
             if stacked else jax.ShapeDtypeStruct(x.shape, x.dtype), grads)
         spec = FusionSpec.build(
             example, mask,
-            payload_dtype=payload_dtype_of(cfg.payload_precision))
+            payload_dtype=payload_dtype_of(cfg.payload_precision),
+            chunk_bytes=cfg.ring_chunking)
     new_outer = outer_mailbox
     if fuse and spec.total > 0:     # all-False mask: nothing rides the ring
         # paper §VII: one fused ring payload instead of one transfer per
         # weight tensor
+        nseg = spec.n_segments
         fg = {"w": spec.flatten(grads, stacked)}
         fmb = {"w": spec.flatten(mb_slot, stacked)}
         # the outer mailbox is ALREADY stored flat — no per-epoch reshuffle
         fomb = {"w": outer_mailbox} if cfg.overlap else None
+        fmask = {"w": True}
+        if nseg > 1:
+            # chunked ring (cfg.ring_chunking): the payload crosses the ring
+            # as a TUPLE of last-axis segments — `_sync_core` is tree-map
+            # based throughout, so each segment runs as its own collective
+            # (pipelined reduce-scatter).  The unchunked path keeps the bare
+            # flat array (not a 1-tuple): byte-identical HLO to pre-chunking.
+            fg = {"w": spec.split_payload(fg["w"])}
+            fmb = {"w": spec.split_payload(fmb["w"])}
+            if fomb is not None:
+                fomb = {"w": spec.split_payload(fomb["w"])}
+            fmask = {"w": (True,) * nseg}
         fsynced, fnew_mb, fnew_omb = _sync_core(
-            comm, cfg, fg, fmb, epoch, {"w": True}, outer_mb=fomb)
+            comm, cfg, fg, fmb, epoch, fmask, outer_mb=fomb)
+        if nseg > 1:
+            # storage stays flat: mailboxes/checkpoints are chunking-agnostic
+            fsynced = {"w": spec.join_payload(fsynced["w"])}
+            fnew_mb = {"w": spec.join_payload(fnew_mb["w"])}
+            if fnew_omb is not None:
+                fnew_omb = {"w": spec.join_payload(fnew_omb["w"])}
         synced = spec.unflatten(fsynced["w"], grads, stacked)
         new_deposit = spec.unflatten(fnew_mb["w"], mb_slot, stacked)
         if fnew_omb is not None:
@@ -795,23 +907,44 @@ class AdaptiveSchedule(SyncSchedule):
         # the payload it arrived with.  On the SPMD backends the bundle is
         # the same leafwise transfer as two separate calls (bitwise equal).
         tag_self = make_deposit_tag(epoch, comm.n_ranks if stacked else None)
-        fg = {"w": spec.flatten(grads, stacked)}
-        bundle = comm.recv_ring_inner({"w": fg["w"], "tag": tag_self})
+        nseg = spec.n_segments
+        fg_w = spec.flatten(grads, stacked)
+        fmb_w = mb_flat
+        fmask = {"w": True}
+        if nseg > 1:
+            # chunked ring: segments + tag ride ONE bundled tree transfer —
+            # the tag stays atomic with every segment of the deposit it
+            # describes, exactly as on the unchunked path
+            fg_w = spec.split_payload(fg_w)
+            fmb_w = spec.split_payload(fmb_w)
+            fmask = {"w": (True,) * nseg}
+        bundle = comm.recv_ring_inner({"w": fg_w, "tag": tag_self})
         dep_tag = bundle["tag"]
 
         # -- exchange on the fused flat payload (same core as static) -------
         fomb = {"w": sync_state["outer_mailbox"]} if cfg.overlap else None
+        if fomb is not None and nseg > 1:
+            fomb = {"w": spec.split_payload(fomb["w"])}
         fsynced, fdeposit, fnew_omb = _sync_core(
-            comm, cfg, fg, {"w": mb_flat}, epoch, {"w": True},
+            comm, cfg, {"w": fg_w}, {"w": fmb_w}, epoch, fmask,
             outer_mb=fomb, ship_due=ship_now, deposit={"w": bundle["w"]})
-        synced = spec.unflatten(fsynced["w"], grads, stacked)
-        new_omb = fnew_omb["w"] if fnew_omb is not None \
-            else sync_state["outer_mailbox"]
+        synced_w = spec.join_payload(fsynced["w"]) if nseg > 1 \
+            else fsynced["w"]
+        deposit_w = spec.join_payload(fdeposit["w"]) if nseg > 1 \
+            else fdeposit["w"]
+        synced = spec.unflatten(synced_w, grads, stacked)
+        if fnew_omb is None:
+            new_omb = sync_state["outer_mailbox"]
+        else:
+            new_omb = spec.join_payload(fnew_omb["w"]) if nseg > 1 \
+                else fnew_omb["w"]
 
         # -- deposit: slot e % k_max takes the bundled (payload, tag) pair --
+        # (joined back flat: the [k_max, D] buffer layout is chunking-
+        # agnostic, so checkpoints round-trip across chunking configs)
         slot_w = jnp.mod(epoch, k_max)
         new_payload = jax.lax.dynamic_update_index_in_dim(
-            payload, fdeposit["w"].astype(payload.dtype), slot_w, axis)
+            payload, deposit_w.astype(payload.dtype), slot_w, axis)
         new_tags = jax.lax.dynamic_update_index_in_dim(
             tags, dep_tag, slot_w, axis)
         return synced, {

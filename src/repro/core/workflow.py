@@ -81,6 +81,12 @@ class WorkflowConfig:
     gen_every: int = 1             # generator cadence: off-epochs skip gen
     #                                grads, the ring exchange AND the Adam
     #                                apply (disc-only epochs)
+    disc_compute: str = "fp32"     # discriminator forward compute precision
+    #                                ('fp32' | 'bf16'): bf16 runs the
+    #                                dominant per-epoch matmuls reduced,
+    #                                with fp32 master weights/optimizer —
+    #                                the compute-side analogue of the bf16
+    #                                ring payload (BENCH_precision.json)
 
     def __post_init__(self):
         if self.disc_every < 1 or self.gen_every < 1:
@@ -88,6 +94,10 @@ class WorkflowConfig:
                 "disc_every/gen_every are update cadences (update when "
                 f"epoch %% N == 0) and must be >= 1; got "
                 f"disc_every={self.disc_every}, gen_every={self.gen_every}")
+        if self.disc_compute not in gan.DISC_COMPUTE:
+            raise ValueError(
+                f"disc_compute must be one of {gan.DISC_COMPUTE}, got "
+                f"{self.disc_compute!r}")
 
     @property
     def disc_batch(self) -> int:
@@ -113,7 +123,8 @@ def init_rank_state(key, wcfg: WorkflowConfig, schedule=None):
     and pass it in."""
     prob = wcfg.problem_obj
     kg, kd, kr = jax.random.split(key, 3)
-    gen_p = gan.init_generator(kg, n_params=prob.n_params)
+    gen_p = gan.init_generator(kg, n_params=prob.n_params,
+                               param_shape=prob.param_shape)
     disc_p = gan.init_discriminator(kd, obs_dim=prob.obs_dim)
     gen_opt = adam(wcfg.gen_lr).init(gen_p)
     disc_opt = adam(wcfg.disc_lr).init(disc_p)
@@ -176,7 +187,8 @@ def init_run(key, n_ranks: int, wcfg: WorkflowConfig, data, rank=None):
         # init_generator — reproduce exactly that for rank 0's key)
         kg0 = jax.random.split(keys[0], 3)[0]
         state["gen"] = gan.init_generator(
-            kg0, n_params=wcfg.problem_obj.n_params)
+            kg0, n_params=wcfg.problem_obj.n_params,
+            param_shape=wcfg.problem_obj.param_shape)
     return state, split_for(sub_keys[rank])
 
 
@@ -311,6 +323,7 @@ def rank_grads(state, data_local, wcfg: WorkflowConfig,
     exchange or apply it)."""
     from .. import problems as problems_lib
     prob = wcfg.problem_obj
+    cdt = gan.compute_dtype_of(wcfg.disc_compute)
     rng, k_boot, k_gen = jax.random.split(state["rng"], 3)
     pred_params = None
 
@@ -325,7 +338,8 @@ def rank_grads(state, data_local, wcfg: WorkflowConfig,
 
         # --- discriminator update (local, immediate — §IV-B) -----------------
         d_loss, d_grads = jax.value_and_grad(gan.disc_loss)(
-            state["disc"], real, jax.lax.stop_gradient(fake))
+            state["disc"], real, jax.lax.stop_gradient(fake),
+            compute_dtype=cdt)
         d_upd, disc_opt = adam(wcfg.disc_lr).update(d_grads,
                                                     state["disc_opt"])
         disc = jax.tree.map(lambda p, u: p + u, state["disc"], d_upd)
@@ -340,7 +354,8 @@ def rank_grads(state, data_local, wcfg: WorkflowConfig,
                 prob, gen_p, k_gen, wcfg.n_param_samples,
                 wcfg.events_per_sample,
                 impl=wcfg.sampler_impl, interpret=wcfg.sampler_interpret)
-            return gan.gen_loss(state["disc"], fake_ev), pred
+            return gan.gen_loss(state["disc"], fake_ev,
+                                compute_dtype=cdt), pred
 
         (g_loss, pred_aux), g_grads = jax.value_and_grad(
             g_objective, has_aux=True)(state["gen"])
@@ -378,9 +393,11 @@ def rank_apply(state, synced_grads, new_sync, wcfg: WorkflowConfig):
 
 def _gen_example(wcfg: WorkflowConfig):
     """Abstract per-rank generator pytree (shapes/dtypes only, no compute)."""
-    n_params = wcfg.problem_obj.n_params
-    return jax.eval_shape(lambda k: gan.init_generator(k, n_params=n_params),
-                          jax.random.PRNGKey(0))
+    prob = wcfg.problem_obj
+    return jax.eval_shape(
+        lambda k: gan.init_generator(k, n_params=prob.n_params,
+                                     param_shape=prob.param_shape),
+        jax.random.PRNGKey(0))
 
 
 def make_schedule(wcfg: WorkflowConfig) -> sync_lib.SyncSchedule:
@@ -393,7 +410,8 @@ def make_schedule(wcfg: WorkflowConfig) -> sync_lib.SyncSchedule:
     mask = gan.weight_mask(example)
     spec = sync_lib.FusionSpec.build(
         example, mask,
-        payload_dtype=sync_lib.payload_dtype_of(wcfg.sync.payload_precision))
+        payload_dtype=sync_lib.payload_dtype_of(wcfg.sync.payload_precision),
+        chunk_bytes=wcfg.sync.ring_chunking)
     return sync_lib.make_schedule(wcfg.sync, mask, spec)
 
 

@@ -1,0 +1,126 @@
+"""Pallas TPU kernels for the imaging problem family's forward operators.
+
+The imaging problems (`repro.problems.imaging`) observe a 2D image-valued
+parameter field through structured LINEAR operators — the regime of
+Hegde's "Algorithmic Aspects of Inverse Problems Using Generative Models"
+(compressive/masked observation of a generative prior's output).  Both
+operators here are pure VPU workloads, tiled exactly like the inverse-CDF
+sampler (`kernels/inverse_cdf.py`):
+
+  mask_apply   y[k, p] = x[k, p] * m[p]          (inpainting occlusion)
+  blur2d       y = (B_h ⊗ B_w) x                 (separable 3-tap Gaussian
+                                                  blur, zero boundary)
+
+Both are linear, so their adjoints are closed-form: the mask is its own
+adjoint (diagonal operator), and the 3-tap blur with zero boundary is
+SYMMETRIC (the shift-down stencil is the transpose of the shift-up one),
+hence self-adjoint — the custom VJPs in `kernels/ops.py` reuse the forward
+kernels for the backward pass instead of falling back to jnp autodiff.
+
+Every kernel has a jnp oracle in `kernels/ref.py` with the SAME operation
+ordering (agreement is pinned by tests/test_kernels.py and enforced by
+`scripts/repro_lint.py` check 8).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .inverse_cdf import interpret_default
+
+# separable 3-tap blur weights (normalized interior: w0 + 2*w1 = 1);
+# boundary rows/cols lose the out-of-image mass — the operator matrix
+# stays symmetric, which is what makes the adjoint the forward kernel
+BLUR_W0 = 0.5
+BLUR_W1 = 0.25
+
+
+# ----------------------------------------------------------------------------
+# inpainting mask
+
+
+def _mask_kernel(x_ref, m_ref, y_ref):
+    x = x_ref[...].astype(jnp.float32)            # [bk, bp]
+    m = m_ref[...].astype(jnp.float32)            # [1, bp] broadcast over rows
+    y_ref[...] = (x * m).astype(y_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_k", "block_p", "interpret"))
+def mask_apply(x, m, block_k: int = 256, block_p: int = 128,
+               interpret: bool | None = None):
+    """x [K, P] image rows; m [P] 0/1 observation mask.  Returns x * m.
+
+    interpret=None auto-selects: compiled Mosaic kernel on TPU, interpreter
+    elsewhere (CPU hosts cannot lower Mosaic)."""
+    if interpret is None:
+        interpret = interpret_default()
+    K, P = x.shape
+    bk, bp = min(block_k, K), min(block_p, P)
+    padK = (-K) % bk
+    padP = (-P) % bp
+    if padK or padP:
+        x = jnp.pad(x, ((0, padK), (0, padP)))
+        m = jnp.pad(m, (0, padP))
+    Kp, Pp = x.shape
+    grid = (Kp // bk, Pp // bp)
+    y = pl.pallas_call(
+        _mask_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bk, bp), lambda ki, pi: (ki, pi)),
+            pl.BlockSpec((1, bp), lambda ki, pi: (0, pi)),
+        ],
+        out_specs=pl.BlockSpec((bk, bp), lambda ki, pi: (ki, pi)),
+        out_shape=jax.ShapeDtypeStruct((Kp, Pp), x.dtype),
+        interpret=interpret,
+    )(x, m[None, :])
+    return y[:K, :P]
+
+
+# ----------------------------------------------------------------------------
+# separable 3-tap 2D blur
+
+
+def _blur_kernel(x_ref, y_ref):
+    x = x_ref[...].astype(jnp.float32)            # [bk, H, W]
+    row = jax.lax.broadcasted_iota(jnp.int32, x.shape, 1)
+    col = jax.lax.broadcasted_iota(jnp.int32, x.shape, 2)
+    H, W = x.shape[1], x.shape[2]
+    # rolls with the wrapped edge masked to zero == zero-boundary shifts,
+    # expressed as pure elementwise VPU ops (no in-kernel pad/concat)
+    up = jnp.roll(x, -1, axis=1) * (row < H - 1)
+    down = jnp.roll(x, 1, axis=1) * (row > 0)
+    v = BLUR_W0 * x + BLUR_W1 * (up + down)
+    left = jnp.roll(v, -1, axis=2) * (col < W - 1)
+    right = jnp.roll(v, 1, axis=2) * (col > 0)
+    y = BLUR_W0 * v + BLUR_W1 * (left + right)
+    y_ref[...] = y.astype(y_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_k", "interpret"))
+def blur2d(x, block_k: int = 8, interpret: bool | None = None):
+    """x [K, H, W] image batch -> separable 3-tap blur, zero boundary.
+
+    Grid over the batch axis only; each grid step loads `block_k` whole
+    images (32x32 fits VMEM comfortably).  The operator is symmetric, so
+    the adjoint IS this kernel (see module docstring)."""
+    if interpret is None:
+        interpret = interpret_default()
+    K, H, W = x.shape
+    bk = min(block_k, K)
+    padK = (-K) % bk
+    if padK:
+        x = jnp.pad(x, ((0, padK), (0, 0), (0, 0)))
+    Kp = x.shape[0]
+    y = pl.pallas_call(
+        _blur_kernel,
+        grid=(Kp // bk,),
+        in_specs=[pl.BlockSpec((bk, H, W), lambda ki: (ki, 0, 0))],
+        out_specs=pl.BlockSpec((bk, H, W), lambda ki: (ki, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((Kp, H, W), x.dtype),
+        interpret=interpret,
+    )(x)
+    return y[:K]

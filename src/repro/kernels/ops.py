@@ -25,6 +25,8 @@ from .flash_attention import flash_attention as _flash
 from .ssd_scan import ssd_scan as _ssd
 from .inverse_cdf import inverse_cdf as _icdf
 from .inverse_cdf import fold_channels as _fold_channels
+from .imaging import blur2d as _blur2d
+from .imaging import mask_apply as _mask_apply
 from . import ref
 
 def _interpret() -> bool:
@@ -127,6 +129,57 @@ def _icdf_bwd(interpret, res, g):
 
 
 inverse_cdf.defvjp(_icdf_fwd, _icdf_bwd)
+
+
+# ----------------------------------------------------------------------------
+# imaging forward operators (linear: closed-form adjoints, see
+# kernels/imaging.py — the mask is diagonal, the blur self-adjoint)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2,))
+def mask_apply(x, m, interpret: Optional[bool] = None):
+    """Inpainting occlusion: x [K, P] * m [P].  interpret=None auto-selects
+    per backend (env override via REPRO_PALLAS_INTERPRET)."""
+    return _mask_apply(x, m,
+                       interpret=_interpret() if interpret is None
+                       else interpret)
+
+
+def _mask_fwd(x, m, interpret):
+    return mask_apply(x, m, interpret), (x, m)
+
+
+def _mask_bwd(interpret, res, g):
+    x, m = res
+    gf = g.astype(jnp.float32)
+    dx = gf * m.astype(jnp.float32)[None, :]        # diagonal adjoint
+    dm = (gf * x.astype(jnp.float32)).sum(axis=0)
+    return dx.astype(x.dtype), dm.astype(m.dtype)
+
+
+mask_apply.defvjp(_mask_fwd, _mask_bwd)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(1,))
+def blur2d(x, interpret: Optional[bool] = None):
+    """Separable 3-tap zero-boundary blur: x [K, H, W] -> [K, H, W].
+    interpret=None auto-selects per backend."""
+    return _blur2d(x, interpret=_interpret() if interpret is None
+                   else interpret)
+
+
+def _blur_fwd(x, interpret):
+    return blur2d(x, interpret), None
+
+
+def _blur_bwd(interpret, res, g):
+    # the blur matrix is symmetric (zero boundary, symmetric taps), so the
+    # adjoint is the forward kernel itself — the backward pass stays on the
+    # Pallas path instead of re-deriving a jnp VJP
+    return (blur2d(g, interpret),)
+
+
+blur2d.defvjp(_blur_fwd, _blur_bwd)
 
 
 def inverse_cdf_channels(u, mu, s, k, interpret: Optional[bool] = None):

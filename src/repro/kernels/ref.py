@@ -58,3 +58,29 @@ def inverse_cdf_ref(u, mu, s, k):
     u = jnp.clip(u.astype(jnp.float32), 1e-6, 1 - 1e-6)
     return (mu[:, None] + s[:, None] * jnp.log(u / (1 - u))
             + k[:, None] * (u - 0.5)).astype(u.dtype)
+
+
+def mask_apply_ref(x, m):
+    """x [K, P]; m [P] 0/1 observation mask -> x * m (fp32 math).
+
+    Oracle for the imaging inpainting operator (`kernels.imaging.
+    mask_apply`); same operation ordering as the kernel."""
+    y = x.astype(jnp.float32) * m.astype(jnp.float32)[None, :]
+    return y.astype(x.dtype)
+
+
+def blur2d_ref(x):
+    """x [K, H, W] -> separable 3-tap blur with zero boundary (fp32 math).
+
+    Oracle for `kernels.imaging.blur2d`: identical tap weights and
+    operation ordering, with the zero-boundary shifts written as pad+slice
+    instead of masked rolls."""
+    from .imaging import BLUR_W0, BLUR_W1
+    xf = x.astype(jnp.float32)
+    up = jnp.pad(xf[:, 1:, :], ((0, 0), (0, 1), (0, 0)))
+    down = jnp.pad(xf[:, :-1, :], ((0, 0), (1, 0), (0, 0)))
+    v = BLUR_W0 * xf + BLUR_W1 * (up + down)
+    left = jnp.pad(v[:, :, 1:], ((0, 0), (0, 0), (0, 1)))
+    right = jnp.pad(v[:, :, :-1], ((0, 0), (0, 0), (1, 0)))
+    y = BLUR_W0 * v + BLUR_W1 * (left + right)
+    return y.astype(x.dtype)

@@ -1,0 +1,142 @@
+"""Convolutional generator for image-valued parameter spaces.
+
+The paper's generator is a 4-layer MLP sized for a 6-parameter proxy app
+(`repro.core.gan.GEN_WIDTHS`).  The imaging problem family
+(`repro.problems.imaging`) inverts a 32x32 = 1024-parameter field, where a
+dense MLP head is both statistically wasteful (no locality prior) and
+payload-inefficient (one 128x1024 output matrix dominates the ring).  This
+module provides the conv widths path that `core.gan.init_generator`
+dispatches to whenever the problem declares a `param_shape`:
+
+    noise [K, NOISE_DIM]
+      -> dense projection to a (H/4, W/4, C0) base grid
+      -> [nearest-upsample x2 -> 3x3 conv -> leaky-relu]  (x2, to H x W)
+      -> 3x3 conv to 1 channel -> sigmoid -> flatten [K, H*W]
+
+The parameter pytree is a dict {"proj": {w, b}, "convs": [{w, b}, ...]} —
+structurally distinct from the MLP's list-of-dicts, which is what the gan
+dispatch keys on; every layer keeps the {w, b} leaf convention so the
+paper's weight-only ring mask (`gan.weight_mask`) extends leafwise.
+
+Sizing (CONV_CHANNELS = (32, 32, 16), 32x32 output): 292,545 parameters,
+290,448 of them weights — a ~1.1 MiB fp32 fused ring payload, the
+megabyte-scale regime the chunked ring exchange (`SyncConfig.
+ring_chunking`) is built for.
+"""
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+# hidden-activation slope, matching core.gan.LEAK (defined locally so the
+# model zoo never imports the solver core — gan imports HERE, lazily)
+LEAK = 0.01
+
+# trunk channel plan: base-grid channels, mid-resolution channels, and the
+# pre-output channels; the output layer always maps to 1 channel
+CONV_CHANNELS = (32, 32, 16)
+
+# each upsample stage doubles the base grid; two stages -> H/4 x W/4 base
+UPSAMPLE_STAGES = 2
+
+
+def conv_gen_widths(param_shape: Tuple[int, int],
+                    noise_dim: int) -> Tuple[int, ...]:
+    """Layer fan-ins of the conv generator for `param_shape` — the conv
+    analogue of `gan.gen_widths` (configs and benchmarks report this)."""
+    h0, w0 = base_grid(param_shape)
+    c0, c1, c2 = CONV_CHANNELS
+    return (noise_dim, h0 * w0 * c0, 9 * c0 * c1, 9 * c1 * c2, 9 * c2)
+
+
+def base_grid(param_shape: Tuple[int, int]) -> Tuple[int, int]:
+    h, w = param_shape
+    f = 1 << UPSAMPLE_STAGES
+    if h % f or w % f:
+        raise ValueError(
+            f"conv generator upsamples x{f}: param_shape {param_shape} "
+            f"must be divisible by {f} in both dims")
+    return h // f, w // f
+
+
+def init_conv_generator(key, param_shape: Tuple[int, int], noise_dim: int,
+                        dtype=jnp.float32):
+    """Kaiming-normal init (same discipline as `gan.init_mlp`)."""
+    h0, w0 = base_grid(param_shape)
+    c0, c1, c2 = CONV_CHANNELS
+    kp, k1, k2, k3 = jax.random.split(key, 4)
+
+    def dense(k, fan_in, fan_out):
+        w = jax.random.normal(k, (fan_in, fan_out)) * math.sqrt(2.0 / fan_in)
+        return {"w": w.astype(dtype), "b": jnp.zeros((fan_out,), dtype)}
+
+    def conv(k, cin, cout):
+        w = jax.random.normal(k, (3, 3, cin, cout)) \
+            * math.sqrt(2.0 / (9 * cin))
+        return {"w": w.astype(dtype), "b": jnp.zeros((cout,), dtype)}
+
+    return {
+        "proj": dense(kp, noise_dim, h0 * w0 * c0),
+        "convs": [conv(k1, c0, c1), conv(k2, c1, c2), conv(k3, c2, 1)],
+    }
+
+
+def conv_weight_mask(params):
+    """Weight-only ring mask in the conv pytree's structure (§V-C: biases
+    never ride the ring) — the conv branch of `gan.weight_mask`."""
+    return {"proj": {"w": True, "b": False},
+            "convs": [{"w": True, "b": False} for _ in params["convs"]]}
+
+
+def _upsample2(x):
+    """Nearest-neighbour x2 upsample, NHWC."""
+    return jnp.repeat(jnp.repeat(x, 2, axis=1), 2, axis=2)
+
+
+def _conv3x3_same(x, w, b):
+    """3x3 SAME conv as patch-extraction + einsum, NHWC x HWIO -> NHWC.
+
+    Deliberately NOT `lax.conv_general_dilated`: the training drivers vmap
+    this over the rank axis (batched filters -> a grouped conv) inside a
+    `lax.scan` epoch loop, and XLA:CPU executes the grouped weight-gradient
+    conv of that combination through a naive fallback — measured ~180x
+    slower than the identical math as dot_general.  Patches + einsum keeps
+    every backend on the fast batched-matmul path and is bitwise-stable
+    under vmap/scan composition."""
+    K, H, W, _ = x.shape
+    xp = jnp.pad(x, ((0, 0), (1, 1), (1, 1), (0, 0)))
+    rows = [xp[:, i:i + H, :, :] for i in range(3)]
+    pat = jnp.stack([r[:, :, j:j + W, :] for r in rows for j in range(3)],
+                    axis=3)                       # [K, H, W, 9, cin]
+    return jnp.einsum("khwpc,pco->khwo", pat,
+                      w.reshape(9, w.shape[2], w.shape[3])) + b
+
+
+def conv_generator_apply(params, noise):
+    """noise [K, noise_dim] -> flat parameter samples [K, H*W], sigmoid-
+    bounded to the unit cube like the MLP head.
+
+    The base-grid shape is recovered from the cached layer shapes (static
+    under jit); non-square grids keep their aspect via the stored conv
+    fan-ins only when H == W, so the conv path requires square images —
+    `problems.imaging` uses 32x32."""
+    proj, convs = params["proj"], params["convs"]
+    x = noise @ proj["w"] + proj["b"]
+    x = jax.nn.leaky_relu(x, LEAK)
+    c0 = convs[0]["w"].shape[2]
+    hw = proj["b"].size // c0
+    h0 = math.isqrt(hw)
+    if h0 * h0 != hw:
+        raise ValueError("conv generator supports square param_shape only")
+    x = x.reshape(x.shape[0], h0, h0, c0)
+    for i, layer in enumerate(convs):
+        if i < UPSAMPLE_STAGES:
+            x = _upsample2(x)
+        x = _conv3x3_same(x, layer["w"], layer["b"])
+        if i < len(convs) - 1:
+            x = jax.nn.leaky_relu(x, LEAK)
+    x = jax.nn.sigmoid(x)
+    return x.reshape(x.shape[0], -1)

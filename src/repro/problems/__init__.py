@@ -23,6 +23,11 @@ Registered problems (see `available()`):
     linear_blur  linear operator y = A x + eps — an 8-pixel source seen
                  through a 4-channel Gaussian blur with logistic measurement
                  noise (sampled by the same inverse-CDF kernel)
+    imaging      32x32 inpainting — every pixel observed except a central
+                 occluded box; image-valued `param_shape` flips the GAN to
+                 the conv generator (megabyte-scale ring payload, ISSUE 9)
+    imaging_blur 32x32 compressive blur — Pallas 3-tap blur + stride-2
+                 subsample, 1024 -> 256 measurements
 
 ## Adding a new inverse problem
 
@@ -50,6 +55,13 @@ class InverseProblem:
     n_params: int
     obs_dim: int
     noise_channels: int
+
+    # image-valued parameter spaces set this to their (H, W); the GAN layer
+    # then dispatches to the convolutional generator (`models.convgen`)
+    # instead of the paper's MLP head.  None (default) = flat parameter
+    # vector, MLP generator — the bitwise-pinned historical path.  When
+    # set, H * W must equal n_params.
+    param_shape: Tuple[int, int] | None = None
 
     # default events per parameter sample for reference-data generation
     # (Tab. III of the paper)
@@ -144,7 +156,7 @@ def available() -> Tuple[str, ...]:
 
 
 def _register_builtin():
-    from . import proxy1d, proxy2d, linear  # noqa: F401  (register on import)
+    from . import proxy1d, proxy2d, linear, imaging  # noqa: F401  (register on import)
 
 
 _register_builtin()

@@ -318,7 +318,8 @@ def _worker_main(rank: int, run_dir: str) -> int:
 
     schedule = workflow.make_schedule(wcfg)
     comm = ProcComm(n_outer, n_inner, rank, run_dir, lockstep=lockstep,
-                    timeout=timeout)
+                    timeout=timeout,
+                    window_bytes=wcfg.sync.ring_chunking)
     barrier = Barrier(run_dir, rank, R, timeout=timeout)
 
     # cadence-aware per-rank steps: the proc runtime's epoch loop is eager

@@ -84,10 +84,18 @@ class ProcComm(Comm):
 
     def __init__(self, n_outer: int, n_inner: int, rank: int, run_dir: str,
                  lockstep: bool = True,
-                 timeout: float = DEFAULT_TIMEOUT_S):
+                 timeout: float = DEFAULT_TIMEOUT_S,
+                 window_bytes: int = 0):
         self.n_outer, self.n_inner = n_outer, n_inner
         self.rank, self.run_dir = rank, run_dir
         self.lockstep, self.timeout = lockstep, timeout
+        # chunked-ring window size (`SyncConfig.ring_chunking`): 0 keeps the
+        # historical one-window-per-channel layout; > 0 splits every
+        # serialized payload into ceil(bytes/window_bytes) mmap windows with
+        # their own channels, so a megabyte deposit lands as pipelined
+        # segments — the consumer drains window 0 while later windows are
+        # still being memcpy'd, instead of rendezvousing on one big buffer
+        self.window_bytes = int(window_bytes)
         self._epoch = 0
         self._out = {}                 # channel -> Mailbox (to successor)
         self._in = {}                  # channel -> Mailbox (from predecessor)
@@ -126,26 +134,53 @@ class ProcComm(Comm):
         tag rides inside the payload itself)."""
         self._epoch = int(epoch)
 
+    def _windows(self, nbytes: int):
+        """Half-open byte spans of the mailbox windows for one payload:
+        one span when `window_bytes` is 0 (or at least the payload size),
+        else the chunked-ring segmentation."""
+        w = self.window_bytes
+        if w <= 0 or w >= nbytes:
+            return [(0, nbytes)]
+        return [(a, min(a + w, nbytes)) for a in range(0, nbytes, w)]
+
     def _transfer(self, channel: str, tree):
         """Deposit `tree` toward my successor, return the predecessor's
-        deposit (lock-step: the matching entry; free-run: the latest)."""
+        deposit (lock-step: the matching entry; free-run: the latest).
+
+        Under chunking the payload crosses as per-window deposits: ALL
+        windows are written before any read, so the successor's first-
+        window read unblocks while this rank's later windows are still
+        in flight.  Each window is internally consistent; in free-running
+        mode a reader may observe windows from adjacent deposits — the
+        same bounded-staleness relaxation the one-sided design already
+        embraces at whole-payload granularity (lock-step runs rendezvous
+        per window, so the pairing — and the bitwise trajectory — is
+        exact).  A single-window payload keeps the historical channel
+        name, so unchunked runs are file-layout identical."""
         succ, pred = self._peers(channel)
         payload = tree_to_bytes(tree)
-        out = self._out.get(channel)
-        if out is None:
-            out = self._out[channel] = Mailbox.for_writer(
-                self._mbx_path(self.rank, succ, channel), len(payload),
-                self.timeout)
-        out.write(payload, self._epoch, self.lockstep)
-        inc = self._in.get(channel)
-        if inc is None:
-            inc = self._in[channel] = Mailbox.for_reader(
-                self._mbx_path(pred, self.rank, channel), len(payload),
-                self.timeout)
-        got = inc.read(self.lockstep)
-        if got is None:                # free-run, producer not started yet
-            return warmup_like(tree)
-        return bytes_to_tree(got[0], tree)
+        spans = self._windows(len(payload))
+        names = [channel] if len(spans) == 1 else \
+            [f"{channel}w{i}" for i in range(len(spans))]
+        for ch, (a, b) in zip(names, spans):
+            out = self._out.get(ch)
+            if out is None:
+                out = self._out[ch] = Mailbox.for_writer(
+                    self._mbx_path(self.rank, succ, ch), b - a,
+                    self.timeout)
+            out.write(payload[a:b], self._epoch, self.lockstep)
+        parts = []
+        for ch, (a, b) in zip(names, spans):
+            inc = self._in.get(ch)
+            if inc is None:
+                inc = self._in[ch] = Mailbox.for_reader(
+                    self._mbx_path(pred, self.rank, ch), b - a,
+                    self.timeout)
+            got = inc.read(self.lockstep)
+            if got is None:            # free-run, producer not started yet
+                return warmup_like(tree)
+            parts.append(got[0])
+        return bytes_to_tree(b"".join(parts), tree)
 
     # -- Comm surface --------------------------------------------------------
 

@@ -290,6 +290,48 @@ def test_repro_lint_repo_clean():
     assert problems == [], "\n".join(problems)
 
 
+def test_repro_lint_repo_clean_with_test_corpus():
+    """The armed form of check 8 (agreement tests required) is what
+    scripts/check.sh runs — it must hold on the real tests/ corpus."""
+    problems = lint.lint_sources(lint.repo_sources(), lint.test_corpus())
+    assert problems == [], "\n".join(problems)
+
+
+KERNEL_SRC = (
+    "from jax.experimental import pallas as pl\n"
+    "def fancy_op(x):\n"
+    "    return pl.pallas_call(_k, out_shape=None)(x)\n"
+    "def _private_helper(x):\n"
+    "    return pl.pallas_call(_k, out_shape=None)(x)\n")
+
+
+def test_lint_kernel_oracle_missing_ref_flagged():
+    problems = lint.lint_sources({"core/ring.py": RING_SRC,
+                                  "kernels/fancy.py": KERNEL_SRC,
+                                  "kernels/ref.py": "def other_ref(x):\n"
+                                                    "    return x\n"})
+    assert any("`fancy_op` has no jnp oracle" in p for p in problems), \
+        problems
+    # private helpers launching pallas_call are not entry points
+    assert not any("_private_helper" in p for p in problems), problems
+
+
+def test_lint_kernel_oracle_agreement_test_required_when_armed():
+    srcs = {"core/ring.py": RING_SRC,
+            "kernels/fancy.py": KERNEL_SRC,
+            "kernels/ref.py": "def fancy_op_ref(x):\n    return x\n"}
+    # unarmed (no test corpus): oracle registration alone satisfies it
+    assert lint.lint_sources(srcs) == []
+    # armed with a corpus that never compares the pair: flagged
+    problems = lint.lint_sources(srcs, {"test_other.py": "x = 1\n"})
+    assert any("no agreement test" in p and "fancy_op" in p
+               for p in problems), problems
+    # armed with a genuine agreement test: clean
+    good = {"test_kernels.py":
+            "y = fancy_op(x)\nr = ref.fancy_op_ref(x)\n"}
+    assert lint.lint_sources(srcs, good) == []
+
+
 def test_lint_comm_surface_missing_and_drift():
     bad = (
         "from ..core.ring import Comm\n"

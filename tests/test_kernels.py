@@ -11,6 +11,7 @@ except ImportError:                      # offline image: seeded shim
 
 from repro.kernels import ref
 from repro.kernels.flash_attention import flash_attention
+from repro.kernels.imaging import blur2d, mask_apply
 from repro.kernels.inverse_cdf import inverse_cdf
 from repro.kernels.ssd_scan import ssd_scan
 
@@ -112,6 +113,74 @@ def test_inverse_cdf_property_monotone(K, E, mu, s, k):
     np.testing.assert_allclose(y, r, rtol=1e-5, atol=1e-5)
     if s > abs(k) * 0.25:          # logistic term dominates the shear
         assert np.all(np.diff(y, axis=1) > -1e-5)
+
+
+# ----------------------------------------------------------------------------
+# imaging forward operators (ISSUE 9) — Pallas kernel vs jnp oracle
+
+
+@pytest.mark.parametrize("K,P", [(1, 32), (7, 100), (64, 1024), (300, 128)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_mask_apply_sweep(K, P, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(6), 2)
+    x = jax.random.normal(ks[0], (K, P), dtype)
+    m = (jax.random.uniform(ks[1], (P,)) > 0.4).astype(dtype)
+    y = mask_apply(x, m, interpret=True)
+    r = ref.mask_apply_ref(x, m)
+    # both sides compute x*m in fp32 with identical ordering: exact
+    np.testing.assert_array_equal(np.asarray(y, np.float32),
+                                  np.asarray(r, np.float32))
+
+
+def test_mask_apply_block_shapes():
+    """Result must not depend on the BlockSpec tiling (incl. ragged pads)."""
+    ks = jax.random.split(jax.random.PRNGKey(7), 2)
+    x = jax.random.normal(ks[0], (100, 200))
+    m = (jax.random.uniform(ks[1], (200,)) > 0.5).astype(x.dtype)
+    outs = [mask_apply(x, m, block_k=bk, block_p=bp, interpret=True)
+            for bk, bp in [(256, 128), (32, 64), (100, 200), (64, 256)]]
+    for o in outs[1:]:
+        np.testing.assert_array_equal(np.asarray(outs[0]), np.asarray(o))
+
+
+@pytest.mark.parametrize("K,H,W", [(1, 8, 8), (5, 32, 32), (20, 16, 24)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_blur2d_sweep(K, H, W, dtype):
+    x = jax.random.normal(jax.random.PRNGKey(8), (K, H, W), dtype)
+    y = blur2d(x, interpret=True)
+    r = ref.blur2d_ref(x)
+    np.testing.assert_allclose(np.asarray(y, np.float32),
+                               np.asarray(r, np.float32),
+                               rtol=1e-6, atol=1e-6)
+
+
+def test_blur2d_is_self_adjoint():
+    """<Bx, y> == <x, By>: the property the custom VJP relies on to reuse
+    the forward kernel as the backward pass."""
+    kx, ky = jax.random.split(jax.random.PRNGKey(9))
+    x = jax.random.normal(kx, (3, 16, 16))
+    y = jax.random.normal(ky, (3, 16, 16))
+    lhs = jnp.vdot(blur2d(x, interpret=True), y)
+    rhs = jnp.vdot(x, blur2d(y, interpret=True))
+    np.testing.assert_allclose(float(lhs), float(rhs), rtol=1e-5)
+
+
+def test_imaging_gradients_match_reference():
+    """The closed-form custom VJPs (diagonal mask adjoint, self-adjoint
+    blur) agree with jax.grad of the jnp oracles."""
+    from repro.kernels import ops
+    ks = jax.random.split(jax.random.PRNGKey(10), 2)
+    x2 = jax.random.normal(ks[0], (6, 64))
+    m = (jax.random.uniform(ks[1], (64,)) > 0.3).astype(x2.dtype)
+    g1 = jax.grad(lambda x: jnp.sum(ops.mask_apply(x, m, True) ** 2))(x2)
+    g2 = jax.grad(lambda x: jnp.sum(ref.mask_apply_ref(x, m) ** 2))(x2)
+    np.testing.assert_allclose(np.asarray(g1), np.asarray(g2),
+                               rtol=1e-5, atol=1e-6)
+    x3 = jax.random.normal(ks[0], (4, 12, 12))
+    g3 = jax.grad(lambda x: jnp.sum(ops.blur2d(x, True) ** 2))(x3)
+    g4 = jax.grad(lambda x: jnp.sum(ref.blur2d_ref(x) ** 2))(x3)
+    np.testing.assert_allclose(np.asarray(g3), np.asarray(g4),
+                               rtol=1e-5, atol=1e-6)
 
 
 def test_kernel_gradients_match_reference():

@@ -123,7 +123,9 @@ def test_fp32_bitwise_matches_historical_spec_derivation(label, monkeypatch):
     s_knob, h_knob = run()
     orig = FusionSpec.build.__func__
 
-    def legacy_build(cls, example, mask, payload_dtype=None):
+    def legacy_build(cls, example, mask, payload_dtype=None, chunk_bytes=0):
+        # the pre-knob derivation had neither wire-dtype nor chunking —
+        # drop both (ring_chunking is 0 in every schedule here anyway)
         return orig(cls, example, mask, payload_dtype=None)
 
     monkeypatch.setattr(FusionSpec, "build", classmethod(legacy_build))

@@ -394,15 +394,20 @@ def test_service_batches_share_one_executable():
 @pytest.fixture(scope="module")
 def trained_stacks():
     """CPU-scale trained generator stacks per registered problem (R=4,
-    300 epochs — seconds each; thresholds in `solve_threshold` carry
-    ~2x margin over the residuals this recipe reaches)."""
+    300 epochs — seconds each for the proxy problems, ~2 min for the
+    image problems; thresholds in `solve_threshold` carry margin over the
+    residuals this recipe reaches).  Configs route through
+    `sagips_gan.for_problem` so image-valued problems pick up the conv
+    recipe (event budget + capped generator step) the presets encode."""
+    from repro.configs import sagips_gan
     stacks = {}
     for name in available():
         prob = get_problem(name)
-        wcfg = workflow.WorkflowConfig(
+        base = workflow.WorkflowConfig(
             sync=SyncConfig(mode="rma_arar_arar", h=10),
             n_param_samples=16, events_per_sample=8,
-            gen_lr=2e-4, disc_lr=5e-4, problem=name)
+            gen_lr=2e-4, disc_lr=5e-4)
+        wcfg = sagips_gan.for_problem(name, base)
         data = prob.make_reference_data(jax.random.PRNGKey(99), 2000)
         state, _ = workflow.train_vmap(jax.random.PRNGKey(0), wcfg, 2, 2,
                                        300, data, chunk=100)
