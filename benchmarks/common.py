@@ -1,14 +1,30 @@
-"""Shared helpers for the benchmark harness."""
+"""Shared helpers for the benchmark harness.
+
+Besides the result-file plumbing this holds the two pieces every
+benchmark used to hand-roll (ISSUE 10 satellite):
+
+  * `timeit_best` — the best-of-`reps` timing loop (compile-warm caller,
+    per-iteration seconds, minimum over repetitions);
+  * `obs_summary` / `stamp` — the provenance stamp each BENCH payload
+    must carry per docs/benchmarks.md: metrics schema version, host,
+    jax version and platform.
+"""
 from __future__ import annotations
 
 import json
 import os
+import platform
+import sys
 import time
 
 RESULTS_DIR = os.path.join(os.path.dirname(__file__), "results")
+_SRC = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "src")
 
 
 def save_result(name: str, payload: dict):
+    stamp(payload)          # every checked-in BENCH payload carries the
+    #                         obs provenance stamp (docs/benchmarks.md)
     os.makedirs(RESULTS_DIR, exist_ok=True)
     path = os.path.join(RESULTS_DIR, f"{name}.json")
     with open(path, "w") as f:
@@ -31,3 +47,42 @@ class Timer:
 
     def __exit__(self, *a):
         self.elapsed = time.time() - self.t0
+
+
+def obs_summary() -> dict:
+    """Run-provenance stamp for BENCH payloads (docs/benchmarks.md):
+    metrics schema version + host + jax version/platform, so every row
+    in a checked-in result can be traced to the software that made it."""
+    if _SRC not in sys.path:
+        sys.path.insert(0, _SRC)
+    import jax
+    from repro.obs.config import OBS_SCHEMA_VERSION
+    return {
+        "metrics_schema": OBS_SCHEMA_VERSION,
+        "host": platform.node(),
+        "jax_version": jax.__version__,
+        "jax_platform": jax.default_backend(),
+    }
+
+
+def stamp(payload: dict) -> dict:
+    """Attach the obs summary to a BENCH payload (idempotent): rows all
+    share one run's provenance, so the stamp lives at payload level."""
+    payload.setdefault("obs", obs_summary())
+    return payload
+
+
+def timeit_best(run_iters, n_iters: int, reps: int, block=None) -> float:
+    """Best-of-`reps` per-iteration seconds of `run_iters()` (which runs
+    `n_iters` iterations and returns a value to block on).  `block`
+    (e.g. `jax.block_until_ready`) is called on the result INSIDE the
+    timed region, so async dispatch cannot flatter the measurement.
+    Callers warm the compile cache first — this measures steady state."""
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        out = run_iters()
+        if block is not None:
+            block(out)
+        best = min(best, (time.perf_counter() - t0) / n_iters)
+    return best

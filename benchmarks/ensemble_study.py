@@ -16,7 +16,6 @@ carry the standard `problem` / `schedule` / `backend` fields
 """
 from __future__ import annotations
 
-import time
 
 import numpy as np
 import jax
@@ -29,7 +28,7 @@ from repro.core.sync import SyncConfig
 from repro.core.workflow import WorkflowConfig
 from repro.problems import available, get_problem
 
-from .common import save_result
+from .common import save_result, stamp, timeit_best
 
 # (label, generator hidden widths, param-samples) — "bigger model, more data"
 VARIANTS = [
@@ -82,13 +81,16 @@ def throughput_lane(problems=None, M=8, n_epochs=20, warmup=3, reps=2,
         for _ in range(warmup):
             state, m = fn(state, dpr)
         jax.block_until_ready(m)
-        best = float("inf")
-        for _ in range(reps):
-            t0 = time.perf_counter()
+
+        def iters():
+            nonlocal state
+            m = None
             for _ in range(n_epochs):
                 state, m = fn(state, dpr)
-            jax.block_until_ready(m)
-            best = min(best, (time.perf_counter() - t0) / n_epochs)
+            return m
+
+        best = timeit_best(iters, n_epochs, reps,
+                           block=jax.block_until_ready)
         noise = jax.random.normal(jax.random.PRNGKey(7),
                                   (256, gan.NOISE_DIM))
         p_hat, _ = ensemble_response(state["gen"], noise)

@@ -30,11 +30,10 @@ from __future__ import annotations
 import json
 import os
 import sys
-import time
 
 import numpy as np
 
-from .common import save_result
+from .common import save_result, stamp, timeit_best
 from .weak_scaling import GPUS_PER_NODE
 
 # (payload_precision, disc_every, disc_compute) — the ISSUE 7 wire-precision
@@ -95,13 +94,16 @@ def run(ranks=(4, 8, 16), schedules=SCHEDULES, h=25, n_epochs=12, warmup=4,
                 for _ in range(warmup):
                     state, m = fn(state, dpr)
                 jax.block_until_ready(m)
-                best = float("inf")
-                for _ in range(reps):
-                    t0 = time.perf_counter()
+
+                def iters():
+                    nonlocal state
+                    m = None
                     for _ in range(n_epochs):
                         state, m = fn(state, dpr)
-                    jax.block_until_ready(m)
-                    best = min(best, (time.perf_counter() - t0) / n_epochs)
+                    return m
+
+                best = timeit_best(iters, n_epochs, reps,
+                                   block=jax.block_until_ready)
                 # end-of-run accuracy from the final generator state — the
                 # per-epoch metrics carry NaN skipped-half losses by design
                 # under cadence, so the residual must come from the params

@@ -219,6 +219,8 @@ def sync_mode_report(R=8, h=2, precisions=("fp32", "bf16"),
                "cadence_flops": {str(k): v
                                  for k, v in cadence_flops.items()},
                "rows": rows_out}
+    from .common import stamp
+    stamp(payload)                 # obs provenance (docs/benchmarks.md)
     res_dir = os.path.join(os.path.dirname(__file__), "results")
     os.makedirs(res_dir, exist_ok=True)
     with open(os.path.join(res_dir, f"{out}.json"), "w") as f:

@@ -30,7 +30,7 @@ import sys
 
 import numpy as np
 
-from .common import save_result
+from .common import save_result, stamp, timeit_best
 
 BW_FAST = 100e9        # intra-node (inner group) bytes/s
 BW_SLOW = 12.5e9       # inter-node bytes/s
@@ -50,6 +50,7 @@ from repro.core import pipeline, workflow
 from repro.core.sync import SyncConfig
 from repro.core.workflow import WorkflowConfig
 from repro.launch import hlo_cost
+from repro.obs.config import ObsConfig
 from repro.problems import get_problem
 
 R = int(sys.argv[1]); mode = sys.argv[2]; h = int(sys.argv[3])
@@ -213,15 +214,16 @@ def measure_exchange_rows(problem="imaging", ranks=(8, 16), h=25,
             fn = jax.jit(lambda g, st, e: sched.exchange(comm, g, st, e))
             o, _ = fn(g, st, 0)
             jax.block_until_ready(o)
-            best = float("inf")
-            for _ in range(reps):
-                t0 = time.perf_counter()
+
+            def iters(fn=fn, g=g, st=st):
+                o = None
                 s = st
                 for e in range(n_iters):
                     o, s = fn(g, s, e)
-                jax.block_until_ready(o)
-                best = min(best, (time.perf_counter() - t0) / n_iters)
-            per[lane] = best
+                return o
+
+            per[lane] = timeit_best(iters, n_iters, reps,
+                                    block=jax.block_until_ready)
         row = {"ranks": R, "problem": problem, "schedule": "sync",
                "backend": "vmap", "lane": "exchange_only",
                "payload_bytes":
@@ -244,7 +246,7 @@ def measure_fused_wall_time(ranks=(4, 8, 16), h=25, n_epochs=30,
                             warmup=5, out_path=None, problem="proxy1d",
                             sync_mode="sync", reps=3, max_staleness=4,
                             backend="vmap", proc_ranks=(2,),
-                            ring_chunking=524288,
+                            ring_chunking=524288, trace_dir=None,
                             exchange_problems=("proxy1d", "imaging"),
                             provenance=None):
     """Measured (not modeled) per-epoch wall time, fused vs unfused ring
@@ -320,14 +322,16 @@ def measure_fused_wall_time(ranks=(4, 8, 16), h=25, n_epochs=30,
             for _ in range(warmup):                     # compile + warm cache
                 state, m = fn(state, dpr)
             jax.block_until_ready(m)
-            best = float("inf")
-            for _ in range(reps):
-                t0 = time.perf_counter()
+
+            def iters():
+                nonlocal state
+                m = None
                 for _ in range(n_epochs):
                     state, m = fn(state, dpr)
-                jax.block_until_ready(m)
-                best = min(best, (time.perf_counter() - t0) / n_epochs)
-            per_lane[lane] = best
+                return m
+
+            per_lane[lane] = timeit_best(iters, n_epochs, reps,
+                                         block=jax.block_until_ready)
         # wire-payload shape of the fused exchange, from the driver's own
         # FusionSpec (what the ring actually moves, incl. segmentation)
         spec = workflow.make_schedule(WorkflowConfig(
@@ -382,10 +386,17 @@ def measure_fused_wall_time(ranks=(4, 8, 16), h=25, n_epochs=30,
                     f"{GPUS_PER_NODE}; the row would misreport the "
                     "measured configuration — pick a multiple of "
                     f"{GPUS_PER_NODE} (or a value below it)")
+            obs = ObsConfig()
+            if trace_dir:
+                # absolute path: run_proc's temp run_dir is cleaned after
+                # aggregation, the trace must outlive it
+                obs = ObsConfig(trace_dir=os.path.abspath(
+                    os.path.join(trace_dir, f"R{R}")))
             wcfg = WorkflowConfig(
                 sync=SyncConfig(mode="rma_arar_arar", h=h,
                                 staleness=max_staleness, adaptive=True),
-                n_param_samples=32, events_per_sample=25, problem=problem)
+                n_param_samples=32, events_per_sample=25, problem=problem,
+                obs=obs)
             out = run_proc(wcfg, n_outer, n_inner, n_epochs, data[:1000],
                            seed=0, lockstep=False, timeout=900)
             # the ring's throughput is bounded by its slowest rank
@@ -417,6 +428,7 @@ def measure_fused_wall_time(ranks=(4, 8, 16), h=25, n_epochs=30,
                "max_staleness": max_staleness if sync_mode == "adaptive"
                else None,
                "jax_platform": jax.default_backend(), "rows": rows}
+    stamp(payload)                 # obs provenance (docs/benchmarks.md)
     if provenance:
         payload["provenance"] = provenance
     save_result("weak_scaling_fusion", payload)
@@ -492,10 +504,17 @@ if __name__ == "__main__":
     ap.add_argument("--proc-ranks", type=int, nargs="+", default=[2],
                     help="rank counts for the proc async lane (keep "
                          "within the host's core count)")
+    ap.add_argument("--trace-dir", default=None,
+                    help="with --backend proc: per-rank host span traces "
+                         "for the async lane (ISSUE 10) — written under "
+                         "DIR/R<ranks>/, merge with scripts/obsview.py "
+                         "to read the rendezvous/exchange wait shares "
+                         "behind each epoch_s_proc row")
     a = ap.parse_args()
     if a.fusion_wall_time:
         measure_fused_wall_time(problem=a.problem, sync_mode=a.sync_mode,
                                 backend=a.backend,
-                                proc_ranks=tuple(a.proc_ranks))
+                                proc_ranks=tuple(a.proc_ranks),
+                                trace_dir=a.trace_dir)
     else:
         run(quick=a.quick, problem=a.problem)

@@ -39,6 +39,7 @@ from repro.core import gan, workflow
 from repro.core.ensemble import ensemble_response
 from repro.core.sync import MODES, SyncConfig
 from repro.core.workflow import WorkflowConfig
+from repro.obs.config import ObsConfig
 from repro.problems import available, get_problem
 
 
@@ -152,6 +153,20 @@ def main():
     ap.add_argument("--jitter-noise-ms", type=float, default=0.0,
                     help="proc backend: seeded uniform [0, NOISE) ms "
                          "per-epoch sleep")
+    ap.add_argument("--obs-metrics", action="store_true",
+                    help="carry the jit-safe obs channel (k_eff, skew, "
+                         "ship counts) through the epoch state; implied "
+                         "by --metrics-out")
+    ap.add_argument("--metrics-out", default=None, metavar="FILE.jsonl",
+                    help="flush chunk-boundary training metrics as JSONL "
+                         "(schema-versioned header + one row per chunk)")
+    ap.add_argument("--trace-dir", default=None,
+                    help="proc backend: per-rank host span traces "
+                         "(trace_rank<r>.jsonl; merge with "
+                         "scripts/obsview.py)")
+    ap.add_argument("--profile-dir", default=None,
+                    help="capture a jax.profiler device trace of the "
+                         "epoch loop into this directory")
     args = ap.parse_args()
 
     adaptive = args.sync_schedule.startswith("adaptive")
@@ -162,6 +177,10 @@ def main():
     problem = get_problem(args.problem)
     n_inner = min(args.inner, args.ranks)
     n_outer = args.ranks // n_inner
+    obs = ObsConfig(metrics=args.obs_metrics or bool(args.metrics_out),
+                    metrics_out=args.metrics_out,
+                    trace_dir=args.trace_dir,
+                    profile_dir=args.profile_dir)
     wcfg = WorkflowConfig(
         sync=SyncConfig(mode=args.mode, h=args.h,
                         staleness=args.max_staleness if adaptive
@@ -172,7 +191,7 @@ def main():
                         ring_chunking=args.ring_chunking),
         n_param_samples=args.param_samples, events_per_sample=25,
         gen_lr=2e-4, disc_lr=5e-4, problem=args.problem,
-        disc_every=args.disc_every, gen_every=args.gen_every)
+        disc_every=args.disc_every, gen_every=args.gen_every, obs=obs)
     # image-valued problems (conv generator path) retune the proxy-scale
     # settings — batch shape + capped generator step; identity otherwise
     from repro.configs import sagips_gan
@@ -265,6 +284,18 @@ def main():
             print(f"resumed from {args.checkpoint_dir} at epoch {start}")
 
     noise = jax.random.normal(jax.random.PRNGKey(7), (256, gan.NOISE_DIM))
+    # observability sinks (ISSUE 10), mirroring workflow.train_vmap:
+    # chunk-boundary metric rows + an optional device-profiler capture
+    writer = None
+    if wcfg.obs.metrics_out:
+        from repro.obs.metrics import MetricsWriter
+        sched = workflow.make_schedule(wcfg)
+        writer = MetricsWriter(wcfg.obs.metrics_out, header={
+            "problem": wcfg.problem, "schedule": sched.name,
+            "payload_bytes": sched.payload_bytes, "n_ranks": R,
+            "n_epochs": args.epochs})
+    if wcfg.obs.profile_dir:
+        jax.profiler.start_trace(wcfg.obs.profile_dir)
     t0 = time.time()
     for e, n in workflow.chunk_schedule(args.epochs, chunk):
         done, last = e + n, e + n - 1
@@ -273,6 +304,9 @@ def main():
         if e < start:              # checkpoint mid-chunk: run only the
             e, n = start, done - start   # epochs past it
         state, metrics = run(state, data_per_rank, n)
+        if writer is not None:
+            from repro.obs.metrics import chunk_row
+            writer.write_row(chunk_row(done, metrics))
         if last // report_every > (e - 1) // report_every \
                 or done == args.epochs:
             p_hat, sigma = ensemble_response(state["gen"], noise)
@@ -295,6 +329,10 @@ def main():
                             metadata={"wall_s": time.time() - t0,
                                       "problem": args.problem,
                                       "schedule": args.sync_schedule})
+    if wcfg.obs.profile_dir:
+        jax.profiler.stop_trace()
+    if writer is not None:
+        writer.close()
 
     report_final(problem, state["gen"], data)
 

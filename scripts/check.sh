@@ -36,6 +36,12 @@
 #                                    # backpressure, Gate interleavings,
 #                                    # per-problem e2e solve quality) after
 #                                    # the serving-jit lint check
+#   scripts/check.sh --obs           # observability lane: jit-safe metrics
+#                                    # channel (disabled-obs HLO identity +
+#                                    # golden bitwise with metrics on), span
+#                                    # tracer units, serving counters and
+#                                    # the obs-layering lint check
+#                                    # (tests/test_obs.py)
 #   scripts/check.sh --docs          # docs lane: dead links, stale file
 #                                    # references, package docstrings
 #                                    # (scripts/docs_lint.py)
@@ -77,6 +83,12 @@ if [[ "${1:-}" == "--serving" ]]; then
     python scripts/repro_lint.py
     exec env PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
         python -m pytest -x -q tests/test_serving.py "$@"
+fi
+if [[ "${1:-}" == "--obs" ]]; then
+    shift
+    python scripts/repro_lint.py
+    exec env PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
+        python -m pytest -x -q tests/test_obs.py "$@"
 fi
 if [[ "${1:-}" == "--docs" ]]; then
     shift

@@ -1,0 +1,148 @@
+#!/usr/bin/env python
+"""Merge per-rank span traces and print a skew/wait-time report.
+
+    python scripts/obsview.py RUN_OR_TRACE_DIR [--out merged.json]
+
+The input directory holds the `trace_rank<r>.jsonl` files a proc run
+writes under `ObsConfig.trace_dir` (searched recursively, so pointing at
+the run dir works too).  Output:
+
+  * ONE Chrome-trace/Perfetto-loadable JSON (`--out`, default
+    `merged_trace.json` next to the rank files) with per-rank process
+    rows and timestamps rebased to the first event;
+  * a per-rank wall-time report: total span time by category (wait /
+    wire / compute / epoch), rendezvous-wait share, exchange counts;
+  * a skew report from the `skew_ema` / `k_eff` / `deposit_age` counter
+    events, cross-checked against `summary_rank<r>.json` when the run
+    summaries sit next to the traces (they disagree only if the trace
+    and summary come from different runs).
+
+See docs/observability.md for the trace format.
+"""
+import argparse
+import glob
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "src"))
+
+from repro.obs.trace import load_events, merge_traces, write_chrome_trace
+
+
+def find_rank_traces(root: str):
+    direct = sorted(glob.glob(os.path.join(root, "trace_rank*.jsonl")))
+    if direct:
+        return direct
+    return sorted(glob.glob(os.path.join(root, "**", "trace_rank*.jsonl"),
+                            recursive=True))
+
+
+def rank_report(events):
+    """Per-rank aggregate: span seconds by category + counter extrema."""
+    ranks = {}
+    for ev in events:
+        r = ranks.setdefault(ev.get("pid", 0), {
+            "spans": 0, "by_cat": {}, "by_name": {}, "counters": {}})
+        if ev.get("ph") == "X":
+            # only top-level spans (depth 0) count toward wall time:
+            # nested waits inside an exchange span must not double-bill
+            depth = ev.get("args", {}).get("depth", 0)
+            r["spans"] += 1
+            dur_s = ev.get("dur", 0.0) / 1e6
+            name = ev.get("name", "?")
+            r["by_name"][name] = r["by_name"].get(name, 0.0) + dur_s
+            if depth <= 1:
+                cat = ev.get("cat", "?")
+                r["by_cat"][cat] = r["by_cat"].get(cat, 0.0) + dur_s
+        elif ev.get("ph") == "C":
+            name = ev.get("name", "?")
+            val = ev.get("args", {}).get(name)
+            if isinstance(val, (int, float)):
+                cur = r["counters"].setdefault(name, [])
+                cur.append(float(val))
+    return ranks
+
+
+def load_summaries(root: str):
+    out = {}
+    for p in sorted(glob.glob(os.path.join(root, "**", "summary_rank*.json"),
+                              recursive=True)):
+        try:
+            with open(p) as f:
+                s = json.load(f)
+            out[int(s.get("rank", -1))] = s
+        except (json.JSONDecodeError, OSError):
+            continue
+    return out
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("trace_dir", help="directory holding trace_rank*.jsonl "
+                                      "(a run dir works: searched "
+                                      "recursively)")
+    ap.add_argument("--out", default=None,
+                    help="merged Chrome-trace JSON path (default: "
+                         "merged_trace.json next to the rank files)")
+    args = ap.parse_args(argv)
+
+    paths = find_rank_traces(args.trace_dir)
+    if not paths:
+        print(f"obsview: no trace_rank*.jsonl under {args.trace_dir}")
+        return 1
+    out_path = args.out or os.path.join(os.path.dirname(paths[0]),
+                                        "merged_trace.json")
+    trace = merge_traces(paths)
+    write_chrome_trace(out_path, trace)
+    n_ev = sum(1 for e in trace["traceEvents"] if e.get("ph") != "M")
+    print(f"obsview: merged {len(paths)} rank trace(s), {n_ev} events "
+          f"-> {out_path}")
+
+    events = []
+    skipped = 0
+    for p in paths:
+        evs, sk = load_events(p)
+        events.extend(evs)
+        skipped += sk
+    if skipped:
+        print(f"obsview: skipped {skipped} torn/garbage line(s)")
+
+    report = rank_report(events)
+    print("\n-- wall time by category (top-level spans, seconds) --")
+    cats = sorted({c for r in report.values() for c in r["by_cat"]})
+    for rank in sorted(report):
+        r = report[rank]
+        parts = "  ".join(f"{c}={r['by_cat'].get(c, 0.0):8.3f}"
+                          for c in cats)
+        print(f"rank {rank}: {parts}  ({r['spans']} spans)")
+    print("\n-- hottest span names (seconds, per rank) --")
+    for rank in sorted(report):
+        top = sorted(report[rank]["by_name"].items(),
+                     key=lambda kv: -kv[1])[:5]
+        pretty = "  ".join(f"{n}={s:.3f}" for n, s in top)
+        print(f"rank {rank}: {pretty}")
+
+    summaries = load_summaries(args.trace_dir)
+    any_counters = any(r["counters"] for r in report.values())
+    if any_counters:
+        print("\n-- skew report (counter events) --")
+        for rank in sorted(report):
+            c = report[rank]["counters"]
+            line = f"rank {rank}:"
+            for name in ("skew_ema", "k_eff", "deposit_age"):
+                if name in c:
+                    line += f"  max {name}={max(c[name]):.4g}"
+            summ = summaries.get(rank)
+            if summ is not None and "skew_ema" in c:
+                ref = float(summ.get("max_skew_ema", 0.0))
+                ok = abs(max(c["skew_ema"]) - ref) < 1e-6
+                line += f"  summary max_skew_ema={ref:.4g} " \
+                        f"[{'match' if ok else 'MISMATCH'}]"
+            print(line)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -51,6 +51,16 @@ over `src/repro`.
      agreement test must exercise kernel and oracle side by side; a
      kernel without its oracle pair cannot be validated on CPU hosts and
      can drift silently on accelerator ones.
+  9. Obs layering — the observability layer splits by execution context
+     (docs/observability.md): the traced schedule/workflow core
+     (`core/sync.py`, `core/workflow.py`, `core/ring.py`) may not import
+     the host-side tracer or counters (`obs.trace`/`obs.counters` — a
+     host span inside a jitted body either fails to trace or times the
+     tracer, not the program), and the host backends (`runtime/`,
+     `serving/`) may not import the traced-metrics flush internals
+     (`obs.metrics` — they consume the schedule-owned obs channel via
+     `exchange_with_obs`/`accumulate_obs`, never the flush helpers).
+     `obs.config` is context-free and importable everywhere.
 
 Exit status is the number of problems found (0 == clean), matching
 `scripts/docs_lint.py` so the lanes compose.
@@ -481,6 +491,51 @@ def check_kernel_oracles(trees: Dict[str, ast.AST], problems: List[str],
 
 
 # ---------------------------------------------------------------------------
+# 9. Obs layering — traced core host-free, host backends metrics-free
+
+# traced-by-construction obs surface (the schedule-owned metrics channel
+# lives in core/sync.py itself; these modules run under jit/vmap/scan)
+OBS_TRACED = ("core/sync.py", "core/workflow.py", "core/ring.py")
+OBS_HOST_BANNED = ("obs.trace", "obs.counters")   # banned in OBS_TRACED
+OBS_METRICS = "obs.metrics"                       # banned in runtime/serving
+
+
+def _obs_imports(tree: ast.AST):
+    """Yield (lineno, dotted-path) for every import in `tree`, with
+    relative dots stripped: `from ..obs.trace import span` ->
+    `obs.trace.span`, `from ..obs import trace` -> `obs.trace`."""
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Import):
+            for a in node.names:
+                yield node.lineno, a.name
+        elif isinstance(node, ast.ImportFrom):
+            mod = node.module or ""
+            for a in node.names:
+                yield node.lineno, (mod + "." + a.name).lstrip(".")
+
+
+def check_obs_layering(rel: str, tree: ast.AST, problems: List[str]):
+    if rel in OBS_TRACED:
+        for lineno, path in _obs_imports(tree):
+            for banned in OBS_HOST_BANNED:
+                if banned in path:
+                    problems.append(
+                        f"{rel}:{lineno}: traced core imports host-side "
+                        f"`{path}` — spans/counters cannot run inside a "
+                        f"jitted body; record into the schedule-owned obs "
+                        f"channel (core/sync.py) and let the driver flush")
+    elif rel.startswith(("runtime/", "serving/")):
+        for lineno, path in _obs_imports(tree):
+            if OBS_METRICS in path:
+                problems.append(
+                    f"{rel}:{lineno}: host backend imports traced-metrics "
+                    f"internals `{path}` — consume the obs channel via "
+                    f"`schedule.exchange_with_obs`/`accumulate_obs`; "
+                    f"`obs.metrics` flush helpers belong to the trainer "
+                    f"drivers only")
+
+
+# ---------------------------------------------------------------------------
 
 
 def lint_sources(sources: Dict[str, str],
@@ -510,6 +565,7 @@ def lint_sources(sources: Dict[str, str],
             check_payload_dtype(rel, tree, problems)
         if _is_serving_surface(rel):
             check_serving_jit(rel, tree, problems)
+        check_obs_layering(rel, tree, problems)
         check_build_kwarg(rel, tree, problems)
     return problems
 

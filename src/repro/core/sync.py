@@ -692,6 +692,60 @@ class SyncSchedule:
     def exchange(self, comm: Comm, grads, sync_state, epoch):
         raise NotImplementedError
 
+    # -- jit-safe metrics channel (ISSUE 10) -----------------------------
+    # The schedule OWNS the obs pytree exactly as it owns its SyncState:
+    # core code records through these pure-jnp hooks and the drivers
+    # flush at chunk boundaries — no host-side tracer ever enters the
+    # traced program (repo-lint check 9).  Every obs call site in the
+    # drivers is gated on the Python-level `ObsConfig.metrics` flag, so
+    # disabled runs trace the literally-unchanged epoch program and
+    # lower to byte-identical HLO (pinned in tests/test_obs.py).
+
+    @property
+    def payload_bytes(self) -> int:
+        """Bytes per rank riding the inner ring each exchange (static:
+        derived from the fused spec, reported in flush headers)."""
+        return self.spec.total * jnp.dtype(self.spec.payload_dtype).itemsize
+
+    def init_obs_state(self, n_ranks: Optional[int] = None):
+        """Zero cumulative obs pytree (rides as `state["obs"]`): last
+        observed k_eff / skew / deposit age / ship flag, plus running
+        ship and exchange counts."""
+        lead = () if n_ranks is None else (n_ranks,)
+        return {
+            "k_eff": jnp.zeros(lead, jnp.int32),
+            "skew_ema": jnp.zeros(lead, CTRL_DTYPE),
+            "deposit_age": jnp.zeros(lead, CTRL_DTYPE),
+            "shipped": jnp.zeros(lead, jnp.int32),
+            "ship_count": jnp.zeros(lead, jnp.int32),
+            "exchange_count": jnp.zeros(lead, jnp.int32),
+        }
+
+    @staticmethod
+    def accumulate_obs(obs_state, row):
+        """Fold one per-exchange obs row into the cumulative state
+        (pure, jit-compatible; gauges overwrite, counts add)."""
+        return {
+            "k_eff": row["k_eff"],
+            "skew_ema": row["skew_ema"],
+            "deposit_age": row["deposit_age"],
+            "shipped": row["shipped"],
+            "ship_count": obs_state["ship_count"] + row["shipped"],
+            "exchange_count": obs_state["exchange_count"] + 1,
+        }
+
+    def obs_row(self, comm: Comm, sync_state, epoch):
+        """Per-exchange obs row (k_eff / skew_ema / deposit_age /
+        shipped), leaves in the schedule's lead layout."""
+        raise NotImplementedError
+
+    def exchange_with_obs(self, comm: Comm, grads, sync_state, epoch):
+        """`exchange` plus the obs row — the enabled-metrics entry point
+        (`(synced, new_state, row)`); the plain `exchange` stays the
+        byte-identical disabled path."""
+        synced, new_state = self.exchange(comm, grads, sync_state, epoch)
+        return synced, new_state, self.obs_row(comm, new_state, epoch)
+
 
 class StaticSchedule(SyncSchedule):
     """Config-time-fixed schedules: sync, fused, depth-k RMA, overlap, and
@@ -729,6 +783,23 @@ class StaticSchedule(SyncSchedule):
             comm, self.cfg, grads, sync_state["mailbox"], epoch, self.mask,
             spec=self.spec, outer_mailbox=sync_state["outer_mailbox"])
         return synced, {"mailbox": new_mb, "outer_mailbox": new_omb}
+
+    def obs_row(self, comm: Comm, sync_state, epoch):
+        # static facts restated as data: depth-k RMA reads are `staleness`
+        # epochs old, ships fire on the fixed h-cadence, skew is zero by
+        # construction (lock-step exchange)
+        lead = sync_state["outer_mailbox"].shape[:-1]
+        k = self.cfg.staleness if self.cfg.mode == "rma_arar_arar" else 0
+        shipped = jnp.zeros(lead, jnp.int32)
+        if self.cfg.overlap and comm.n_outer > 1:
+            due = jnp.equal(jnp.mod(epoch + 1, self.cfg.h), 0)
+            shipped = jnp.broadcast_to(due, lead).astype(jnp.int32)
+        return {
+            "k_eff": jnp.full(lead, k, jnp.int32),
+            "skew_ema": jnp.zeros(lead, CTRL_DTYPE),
+            "deposit_age": jnp.zeros(lead, CTRL_DTYPE),
+            "shipped": shipped,
+        }
 
 
 # adaptive controller constants: EMA smoothing of the observed skew, the
@@ -840,14 +911,34 @@ class AdaptiveSchedule(SyncSchedule):
         }
 
     def exchange(self, comm: Comm, grads, sync_state, epoch):
+        synced, new_state, _ = self._exchange(comm, grads, sync_state,
+                                              epoch, with_obs=False)
+        return synced, new_state
+
+    def exchange_with_obs(self, comm: Comm, grads, sync_state, epoch):
+        # the adaptive obs row reports the exchange's ACTUAL in-flight
+        # values (clamped observed age, post-step EMA/k_eff, the ship
+        # decision itself) rather than re-deriving them from the new
+        # state, so the row can never disagree with the update
+        return self._exchange(comm, grads, sync_state, epoch, with_obs=True)
+
+    def _exchange(self, comm: Comm, grads, sync_state, epoch,
+                  with_obs: bool):
         cfg, spec, k_max = self.cfg, self.spec, self.k_max
         stacked = isinstance(comm, VmapComm)
         axis = 1 if stacked else 0
         payload = sync_state["mailbox"]["payload"]
         tags = sync_state["mailbox"]["tag"]
         ctrl = sync_state["ctrl"]
+        obs_shape = ctrl["skew_ema"].shape    # the schedule's lead layout
         if spec.total == 0:           # all-False mask: nothing rides the ring
-            return grads, sync_state
+            row = {
+                "k_eff": jnp.broadcast_to(ctrl["k_eff"], obs_shape),
+                "skew_ema": ctrl["skew_ema"],
+                "deposit_age": jnp.zeros(obs_shape, CTRL_DTYPE),
+                "shipped": jnp.zeros(obs_shape, jnp.int32),
+            } if with_obs else None
+            return grads, sync_state, row
 
         # -- read: the slot deposited exactly k_eff epochs ago ---------------
         # (SPMD-uniform: the controller is pmean-reduced, so every rank
@@ -947,11 +1038,23 @@ class AdaptiveSchedule(SyncSchedule):
             payload, deposit_w.astype(payload.dtype), slot_w, axis)
         new_tags = jax.lax.dynamic_update_index_in_dim(
             tags, dep_tag, slot_w, axis)
+        row = None
+        if with_obs:
+            ship_obs = ship_now if cfg.overlap \
+                else jnp.zeros((), jnp.bool_)
+            row = {
+                "k_eff": jnp.broadcast_to(new_k, obs_shape)
+                            .astype(jnp.int32),
+                "skew_ema": new_ctrl["skew_ema"],
+                "deposit_age": observed,
+                "shipped": jnp.broadcast_to(ship_obs, obs_shape)
+                              .astype(jnp.int32),
+            }
         return synced, {
             "mailbox": {"payload": new_payload, "tag": new_tags},
             "outer_mailbox": new_omb,
             "ctrl": new_ctrl,
-        }
+        }, row
 
 
 def make_schedule(cfg: SyncConfig, mask, spec: FusionSpec) -> SyncSchedule:

@@ -59,6 +59,7 @@ import jax.numpy as jnp
 
 from . import gan, pipeline, sync as sync_lib
 from .ring import Comm, ShardComm, VmapComm
+from ..obs.config import ObsConfig
 from ..optim import adam
 
 
@@ -87,6 +88,11 @@ class WorkflowConfig:
     #                                with fp32 master weights/optimizer —
     #                                the compute-side analogue of the bf16
     #                                ring payload (BENCH_precision.json)
+    obs: ObsConfig = ObsConfig()   # telemetry (ISSUE 10): metrics pytree +
+    #                                flush/trace/profile sinks.  The default
+    #                                is inert — every obs branch below is a
+    #                                Python-level gate, so disabled configs
+    #                                lower to byte-identical HLO (pinned)
 
     def __post_init__(self):
         if self.disc_every < 1 or self.gen_every < 1:
@@ -130,13 +136,16 @@ def init_rank_state(key, wcfg: WorkflowConfig, schedule=None):
     disc_opt = adam(wcfg.disc_lr).init(disc_p)
     if schedule is None:
         schedule = make_schedule(wcfg)
-    return {
+    state = {
         "gen": gen_p, "disc": disc_p,
         "gen_opt": gen_opt, "disc_opt": disc_opt,
         "sync": schedule.init_state(),
         "rng": kr,
         "epoch": jnp.zeros((), jnp.int32),
     }
+    if wcfg.obs.metrics:
+        state["obs"] = schedule.init_obs_state()
+    return state
 
 
 def init_state(key, n_ranks: int, wcfg: WorkflowConfig, same_generator=True):
@@ -458,10 +467,20 @@ def _epoch_body_vmap(comm, schedule, wcfg: WorkflowConfig):
                 state, data_per_rank)
 
         def gen_segment(ns, gg):
-            synced, new_sync = schedule.exchange(
-                comm, gg, ns["sync"], epoch_idx)
-            return jax.vmap(lambda s, g, n2: rank_apply(s, g, n2, wcfg))(
+            # obs is a Python-level gate (wcfg.obs.metrics is a plain
+            # bool): the disabled branch traces the literally-unchanged
+            # exchange, so disabled configs lower to byte-identical HLO
+            if wcfg.obs.metrics:
+                synced, new_sync, row = schedule.exchange_with_obs(
+                    comm, gg, ns["sync"], epoch_idx)
+            else:
+                synced, new_sync = schedule.exchange(
+                    comm, gg, ns["sync"], epoch_idx)
+            out = jax.vmap(lambda s, g, n2: rank_apply(s, g, n2, wcfg))(
                 ns, synced, new_sync)
+            if wcfg.obs.metrics:
+                out["obs"] = schedule.accumulate_obs(ns["obs"], row)
+            return out
 
         if ge == 1:
             out = gen_segment(new_state, g_grads)
@@ -470,6 +489,8 @@ def _epoch_body_vmap(comm, schedule, wcfg: WorkflowConfig):
                 (epoch_idx % ge) == 0, gen_segment,
                 lambda ns, gg: dict(ns, epoch=ns["epoch"] + 1),
                 new_state, g_grads)
+        if wcfg.obs.metrics:
+            metrics = dict(metrics, obs=out["obs"])
         return out, metrics
     return epoch
 
@@ -562,6 +583,14 @@ def make_epoch_fn_shard(mesh, wcfg: WorkflowConfig,
                 state1, data_local[0])
 
         def gen_segment(ns, gg):
+            # same Python-level obs gate as the vmap body: disabled
+            # configs trace the unchanged exchange (HLO-identity pin)
+            if wcfg.obs.metrics:
+                synced, new_sync, row = schedule.exchange_with_obs(
+                    comm, gg, ns["sync"], ns["epoch"])
+                out1 = rank_apply(ns, synced, new_sync, wcfg)
+                out1["obs"] = schedule.accumulate_obs(ns["obs"], row)
+                return out1
             synced, new_sync = schedule.exchange(
                 comm, gg, ns["sync"], ns["epoch"])
             return rank_apply(ns, synced, new_sync, wcfg)
@@ -573,6 +602,8 @@ def make_epoch_fn_shard(mesh, wcfg: WorkflowConfig,
                 (epoch_idx % ge) == 0, gen_segment,
                 lambda ns, gg: dict(ns, epoch=ns["epoch"] + 1),
                 new_state, g_grads)
+        if wcfg.obs.metrics:
+            metrics = dict(metrics, obs=out["obs"])
         out = jax.tree.map(lambda x: x[None], out)
         metrics = jax.tree.map(lambda x: x[None], metrics)
         return out, metrics
@@ -659,27 +690,49 @@ def train_vmap(key, wcfg: WorkflowConfig, n_outer: int, n_inner: int,
         if restored is not None:
             state, start = restored, step
 
+    # observability sinks (ISSUE 10): chunk-boundary metric flushes plus
+    # an optional device-side jax.profiler capture around the epoch loop
+    writer = None
+    if wcfg.obs.metrics_out:
+        from ..obs.metrics import MetricsWriter
+        sched = make_schedule(wcfg)
+        writer = MetricsWriter(wcfg.obs.metrics_out, header={
+            "problem": wcfg.problem, "schedule": sched.name,
+            "payload_bytes": sched.payload_bytes, "n_ranks": R,
+            "n_epochs": n_epochs})
+    if wcfg.obs.profile_dir:
+        jax.profiler.start_trace(wcfg.obs.profile_dir)
+
     hist = []
-    for e, n in chunk_schedule(n_epochs, chunk):
-        done = e + n
-        if done <= start:          # chunk fully covered by the checkpoint
-            continue
-        if e < start:              # checkpoint landed mid-chunk (e.g. a
-            e, n = start, done - start   # final-epoch save): run only the
-        #                                  epochs past it, labels stay global
-        state, metrics = run(state, data_per_rank, n)
-        for j in range(n):
-            ge = e + j
-            if (checkpoint_every and ge % checkpoint_every == 0) \
-                    or ge == n_epochs - 1:
-                hist.append(jax.tree.map(lambda x: jnp.asarray(x[j]),
-                                         metrics))
-        if checkpoint_dir and (done == n_epochs or (
-                checkpoint_every and done % checkpoint_every == 0)):
-            from ..checkpoint.store import save_checkpoint
-            save_checkpoint(checkpoint_dir, done, state,
-                            metadata={"epochs": done,
-                                      "problem": wcfg.problem})
+    try:
+        for e, n in chunk_schedule(n_epochs, chunk):
+            done = e + n
+            if done <= start:      # chunk fully covered by the checkpoint
+                continue
+            if e < start:          # checkpoint landed mid-chunk (e.g. a
+                e, n = start, done - start  # final-epoch save): run only
+            #                          the epochs past it, labels stay global
+            state, metrics = run(state, data_per_rank, n)
+            if writer is not None:
+                from ..obs.metrics import chunk_row
+                writer.write_row(chunk_row(done, metrics))
+            for j in range(n):
+                ge = e + j
+                if (checkpoint_every and ge % checkpoint_every == 0) \
+                        or ge == n_epochs - 1:
+                    hist.append(jax.tree.map(lambda x: jnp.asarray(x[j]),
+                                             metrics))
+            if checkpoint_dir and (done == n_epochs or (
+                    checkpoint_every and done % checkpoint_every == 0)):
+                from ..checkpoint.store import save_checkpoint
+                save_checkpoint(checkpoint_dir, done, state,
+                                metadata={"epochs": done,
+                                          "problem": wcfg.problem})
+    finally:
+        if wcfg.obs.profile_dir:
+            jax.profiler.stop_trace()
+        if writer is not None:
+            writer.close()
     history = jax.tree.map(lambda *xs: jnp.stack(xs), *hist) if hist else {}
     return state, history
 

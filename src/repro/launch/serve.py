@@ -51,6 +51,11 @@ def main():
                     help="pre-compile the whole (problem, bucket) pool "
                          "before serving")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--stats", action="store_true",
+                    help="print the full SolveService.snapshot() — queue "
+                         "depth + reject/retry-after rate, compile-cache "
+                         "hit/miss, per-bucket latency histograms "
+                         "(ISSUE 10 serving counters)")
     args = ap.parse_args()
 
     cfg = serving_cfg.DEFAULT if args.preset == "default" \
@@ -114,7 +119,28 @@ def main():
         print(f"[serve] {name:>12s} bucket {bucket:>5d}: {len(xs):3d} req, "
               f"p50 {_percentile(xs, 50)*1e3:8.1f} ms, "
               f"p99 {_percentile(xs, 99)*1e3:8.1f} ms")
-    print(f"[serve] stats: {svc.stats()}")
+    if args.stats:
+        _print_snapshot(svc.snapshot())
+    else:
+        print(f"[serve] stats: {svc.stats()}")
+
+
+def _print_snapshot(snap: dict):
+    """Human-readable rendering of `SolveService.snapshot()`."""
+    q = snap["queue"]
+    c = snap["cache"]
+    print(f"[stats] served {snap['served']}, queue depth "
+          f"{snap['queue_depth']} (admitted {q['admitted']}, rejected "
+          f"{q['rejected']}, drained {q['drained']}; reject rate "
+          f"{snap['reject_rate']:.1%}, retry-after "
+          f"{snap['retry_after_s']*1e3:.0f} ms)")
+    print(f"[stats] compile cache: {c['hits']} hits / {c['misses']} misses "
+          f"(hit rate {snap['cache_hit_rate']:.1%}), {c['compiles']} "
+          f"compiles, {c['evictions']} evictions")
+    for lane, h in snap["latency"].items():
+        print(f"[stats] latency {lane:>16s}: n={h['count']:4d}  "
+              f"p50 {h['p50_s']*1e3:8.1f} ms  p90 {h['p90_s']*1e3:8.1f} ms  "
+              f"p99 {h['p99_s']*1e3:8.1f} ms")
 
 
 if __name__ == "__main__":

@@ -25,6 +25,8 @@ import struct
 import time
 import zlib
 
+from ..obs.trace import span as _span
+
 
 @dataclasses.dataclass(frozen=True)
 class JitterConfig:
@@ -48,7 +50,8 @@ class JitterConfig:
     def apply(self, rank: int, epoch: int):
         t = self.sleep_s(rank, epoch)
         if t > 0.0:
-            time.sleep(t)
+            with _span("jitter.sleep", cat="wait", ms=t * 1e3):
+                time.sleep(t)
 
     def to_dict(self) -> dict:
         return dataclasses.asdict(self)

@@ -55,9 +55,11 @@ def wcfg_to_dict(wcfg) -> dict:
 def wcfg_from_dict(d: dict):
     from ..core.sync import SyncConfig
     from ..core.workflow import WorkflowConfig
+    from ..obs.config import ObsConfig
     d = dict(d)
     sync = SyncConfig(**d.pop("sync"))
-    return WorkflowConfig(sync=sync, **d)
+    obs = ObsConfig(**d.pop("obs", {}))
+    return WorkflowConfig(sync=sync, obs=obs, **d)
 
 
 def _free_port() -> int:
@@ -303,6 +305,22 @@ def _worker_main(rank: int, run_dir: str) -> int:
     wcfg = wcfg_from_dict(cfg["wcfg"])
     n_outer, n_inner = cfg["n_outer"], cfg["n_inner"]
     R = n_outer * n_inner
+
+    # per-rank host-side span tracer (ISSUE 10): every mailbox wait,
+    # window read/write, barrier, jitter sleep and ProcComm exchange below
+    # this point records into trace_rank<rank>.jsonl; merge the rank files
+    # with scripts/obsview.py.  Relative trace dirs land inside run_dir so
+    # the trace survives next to the summaries.
+    from ..obs import trace as obs_trace
+    tracer = None
+    if wcfg.obs.trace_dir:
+        tdir = wcfg.obs.trace_dir
+        if not os.path.isabs(tdir):
+            tdir = os.path.join(run_dir, tdir)
+        os.makedirs(tdir, exist_ok=True)
+        tracer = obs_trace.Tracer(
+            os.path.join(tdir, f"trace_rank{rank}.jsonl"), rank=rank)
+        obs_trace.install(tracer)
     n_epochs = cfg["n_epochs"]
     lockstep = cfg["lockstep"]
     jitter = JitterConfig.from_dict(cfg["jitter"])
@@ -353,30 +371,58 @@ def _worker_main(rank: int, run_dir: str) -> int:
 
     barrier.arrive_and_wait("run start")
     adaptive = wcfg.sync.adaptive
+    obs_on = wcfg.obs.metrics
     hist = {"d_loss": [], "g_loss": [], "skew_ema": [], "k_eff": [],
             "epoch_s": []}
+    if obs_on:
+        hist["deposit_age"], hist["shipped"] = [], []
     t_run = time.time()
     for e in range(start, n_epochs):
-        jitter.apply(rank, e)
-        t0 = time.perf_counter()
-        disc_due = (e % wcfg.disc_every) == 0
-        gen_due = (e % wcfg.gen_every) == 0
-        new_state, g_grads, metrics = fn_grads[(disc_due, gen_due)](
-            state, data_local)
-        if gen_due:
-            comm.begin_epoch(e)
-            synced, new_sync = schedule.exchange(
-                comm, g_grads, new_state["sync"], new_state["epoch"])
-            state = fn_apply(new_state, synced, new_sync)
-        else:                       # disc-only epoch: no exchange, no apply
-            state = fn_bump(new_state)
-        jax.block_until_ready(state)
+        with obs_trace.span("epoch", cat="epoch", epoch=e):
+            jitter.apply(rank, e)
+            t0 = time.perf_counter()
+            disc_due = (e % wcfg.disc_every) == 0
+            gen_due = (e % wcfg.gen_every) == 0
+            with obs_trace.span("compute.grads", cat="compute", epoch=e):
+                new_state, g_grads, metrics = fn_grads[(disc_due, gen_due)](
+                    state, data_local)
+                if tracer is not None:   # make the span cover the compute,
+                    jax.block_until_ready(g_grads)   # not just the dispatch
+            if gen_due:
+                comm.begin_epoch(e)
+                row = None
+                with obs_trace.span("exchange", cat="wire", epoch=e):
+                    if obs_on:
+                        synced, new_sync, row = schedule.exchange_with_obs(
+                            comm, g_grads, new_state["sync"],
+                            new_state["epoch"])
+                    else:
+                        synced, new_sync = schedule.exchange(
+                            comm, g_grads, new_state["sync"],
+                            new_state["epoch"])
+                with obs_trace.span("compute.apply", cat="compute",
+                                    epoch=e):
+                    state = fn_apply(new_state, synced, new_sync)
+                if obs_on:
+                    state = dict(state, obs=schedule.accumulate_obs(
+                        new_state["obs"], row))
+            else:                   # disc-only epoch: no exchange, no apply
+                state = fn_bump(new_state)
+            jax.block_until_ready(state)
         hist["epoch_s"].append(time.perf_counter() - t0)
         hist["d_loss"].append(float(metrics["d_loss"]))
         hist["g_loss"].append(float(metrics["g_loss"]))
         if adaptive:
             hist["skew_ema"].append(float(state["sync"]["ctrl"]["skew_ema"]))
             hist["k_eff"].append(int(state["sync"]["ctrl"]["k_eff"]))
+            if tracer is not None:
+                tracer.counter("skew_ema", hist["skew_ema"][-1])
+                tracer.counter("k_eff", hist["k_eff"][-1])
+        if obs_on:
+            hist["deposit_age"].append(float(state["obs"]["deposit_age"]))
+            hist["shipped"].append(int(state["obs"]["shipped"]))
+            if tracer is not None:
+                tracer.counter("deposit_age", hist["deposit_age"][-1])
         if cfg["ckpt_every"] and (e + 1) % cfg["ckpt_every"] == 0:
             save_checkpoint(ckpt_dir, e + 1, state,
                             metadata={"rank": rank, "epochs": e + 1})
@@ -395,11 +441,21 @@ def _worker_main(rank: int, run_dir: str) -> int:
         "max_k_eff": max(hist.get("k_eff") or [1]),
         "history": hist,
     }
+    if obs_on:
+        summary["obs"] = {
+            "payload_bytes": schedule.payload_bytes,
+            "ship_count": int(state["obs"]["ship_count"]),
+            "exchange_count": int(state["obs"]["exchange_count"]),
+            "max_deposit_age": max(hist.get("deposit_age") or [0.0]),
+        }
     with open(os.path.join(run_dir, f"summary_rank{rank}.json"), "w") as f:
         json.dump(summary, f, indent=1)
 
     # keep the coordinator (process 0) alive until every rank is done
     barrier.arrive_and_wait("run end")
+    if tracer is not None:
+        obs_trace.uninstall()
+        tracer.close()
     if distributed:
         try:
             jax.distributed.shutdown()

@@ -61,6 +61,8 @@ import struct
 import time
 from typing import Callable, Optional, Tuple
 
+from ..obs.trace import span as _span
+
 _POLL_S = 2e-4
 
 # Mailbox header: write_seq, read_ack, tag, nbytes
@@ -219,24 +221,29 @@ class Mailbox:
         n = self._seq
         if lockstep:
             # rendezvous: entry n-1 must be consumed before we overwrite
-            _wait(lambda: self._get(_MBX_OFF_ACK) >= n - 1, self.timeout,
-                  f"reader ack {n - 1} on {self.path}")
-            mm[_MBX_HDR.size:self._size] = payload
-            _I64.pack_into(mm, _MBX_OFF_TAG, tag)
-            self._put(_MBX_OFF_NBYTES, self.nbytes)
-            _trace("mbx.publish.pre", self.path)
-            self._put(_MBX_OFF_WSEQ, n)  # publish AFTER the payload
-            _trace("mbx.publish.post", self.path)
+            with _span("mbx.rendezvous.write", cat="wait", path=self.path):
+                _wait(lambda: self._get(_MBX_OFF_ACK) >= n - 1, self.timeout,
+                      f"reader ack {n - 1} on {self.path}")
+            with _span("mbx.write", cat="wire", path=self.path,
+                       bytes=self.nbytes):
+                mm[_MBX_HDR.size:self._size] = payload
+                _I64.pack_into(mm, _MBX_OFF_TAG, tag)
+                self._put(_MBX_OFF_NBYTES, self.nbytes)
+                _trace("mbx.publish.pre", self.path)
+                self._put(_MBX_OFF_WSEQ, n)  # publish AFTER the payload
+                _trace("mbx.publish.post", self.path)
         else:
             # seqlock overwrite, never waits: odd = write in progress
-            self._put(_MBX_OFF_WSEQ, 2 * n - 1)
-            _trace("mbx.publish.begin", self.path)
-            mm[_MBX_HDR.size:self._size] = payload
-            _I64.pack_into(mm, _MBX_OFF_TAG, tag)
-            self._put(_MBX_OFF_NBYTES, self.nbytes)
-            _trace("mbx.publish.pre", self.path)
-            self._put(_MBX_OFF_WSEQ, 2 * n)
-            _trace("mbx.publish.post", self.path)
+            with _span("mbx.write", cat="wire", path=self.path,
+                       bytes=self.nbytes):
+                self._put(_MBX_OFF_WSEQ, 2 * n - 1)
+                _trace("mbx.publish.begin", self.path)
+                mm[_MBX_HDR.size:self._size] = payload
+                _I64.pack_into(mm, _MBX_OFF_TAG, tag)
+                self._put(_MBX_OFF_NBYTES, self.nbytes)
+                _trace("mbx.publish.pre", self.path)
+                self._put(_MBX_OFF_WSEQ, 2 * n)
+                _trace("mbx.publish.post", self.path)
 
     # -- read side -----------------------------------------------------------
 
@@ -247,31 +254,37 @@ class Mailbox:
             self._ensure_open()
             self._seq += 1
             n = self._seq
-            _wait(lambda: self._get(_MBX_OFF_WSEQ) >= n, self.timeout,
-                  f"entry {n} on {self.path}")
-            out = bytes(self._mm[_MBX_HDR.size:self._size])
-            tag = _I64.unpack_from(self._mm, _MBX_OFF_TAG)[0]
-            _trace("mbx.ack.pre", self.path)
-            self._put(_MBX_OFF_ACK, n)  # acknowledge: writer may overwrite
-            _trace("mbx.ack.post", self.path)
+            with _span("mbx.rendezvous.read", cat="wait", path=self.path):
+                _wait(lambda: self._get(_MBX_OFF_WSEQ) >= n, self.timeout,
+                      f"entry {n} on {self.path}")
+            with _span("mbx.read", cat="wire", path=self.path,
+                       bytes=self.nbytes):
+                out = bytes(self._mm[_MBX_HDR.size:self._size])
+                tag = _I64.unpack_from(self._mm, _MBX_OFF_TAG)[0]
+                _trace("mbx.ack.pre", self.path)
+                self._put(_MBX_OFF_ACK, n)  # acknowledge: writer may
+                _trace("mbx.ack.post", self.path)         # overwrite
             return out, tag
         if self._mm is None and not os.path.exists(self.path):
             return None                 # producer has never deposited
         self._ensure_open()
-        deadline = time.monotonic() + self.timeout
-        while True:
-            s1 = self._get(_MBX_OFF_WSEQ)
-            if s1 == 0:
-                return None             # file exists but nothing published
-            if s1 % 2 == 0:
-                _trace("mbx.read.snap", self.path)
-                out = bytes(self._mm[_MBX_HDR.size:self._size])
-                tag = _I64.unpack_from(self._mm, _MBX_OFF_TAG)[0]
-                if self._get(_MBX_OFF_WSEQ) == s1:  # seqlock re-check
-                    return out, tag     # no torn read
-            if time.monotonic() > deadline:
-                raise MailboxTimeout(f"seqlock never settled on {self.path}")
-            time.sleep(_POLL_S)
+        with _span("mbx.read", cat="wire", path=self.path,
+                   bytes=self.nbytes):
+            deadline = time.monotonic() + self.timeout
+            while True:
+                s1 = self._get(_MBX_OFF_WSEQ)
+                if s1 == 0:
+                    return None         # file exists but nothing published
+                if s1 % 2 == 0:
+                    _trace("mbx.read.snap", self.path)
+                    out = bytes(self._mm[_MBX_HDR.size:self._size])
+                    tag = _I64.unpack_from(self._mm, _MBX_OFF_TAG)[0]
+                    if self._get(_MBX_OFF_WSEQ) == s1:  # seqlock re-check
+                        return out, tag     # no torn read
+                if time.monotonic() > deadline:
+                    raise MailboxTimeout(
+                        f"seqlock never settled on {self.path}")
+                time.sleep(_POLL_S)
 
 
 class Board:
@@ -345,8 +358,10 @@ class Board:
         self._seq += 1
         n = self._seq
         if lockstep and n > 2:
-            _wait(lambda: all(self._ack(r) >= n - 2 for r in readers),
-                  self.timeout, f"board acks {n - 2} on {self.path}")
+            with _span("board.rendezvous.write", cat="wait",
+                       path=self.path):
+                _wait(lambda: all(self._ack(r) >= n - 2 for r in readers),
+                      self.timeout, f"board acks {n - 2} on {self.path}")
         off = (n % 2) * self._stride
         lock = _U64.unpack_from(mm, off + _SLOT_OFF_LOCK)[0]
         _U64.pack_into(mm, off + _SLOT_OFF_LOCK, lock + 1)  # odd: writing
@@ -387,7 +402,9 @@ class Board:
                     return True
                 return False
 
-            _wait(ready, self.timeout, f"board entry {n} on {self.path}")
+            with _span("board.rendezvous.read", cat="wait", path=self.path):
+                _wait(ready, self.timeout,
+                      f"board entry {n} on {self.path}")
             _trace("board.ack.pre", self.path)
             _U64.pack_into(self._mm,
                            self._acks_off + _U64.size * reader_rank, n)
@@ -422,7 +439,8 @@ class Barrier:
         self._round += 1
         n = self._round
         _U64.pack_into(self._mm, _U64.size * self.rank, n)
-        _wait(lambda: all(
-            _U64.unpack_from(self._mm, _U64.size * r)[0] >= n
-            for r in range(self.n_ranks)), self.timeout,
-            f"{what} (round {n})")
+        with _span("barrier", cat="wait", what=what, round=n):
+            _wait(lambda: all(
+                _U64.unpack_from(self._mm, _U64.size * r)[0] >= n
+                for r in range(self.n_ranks)), self.timeout,
+                f"{what} (round {n})")

@@ -42,6 +42,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..core.ring import Comm
+from ..obs.trace import span as _span
 from .mailbox import Board, Mailbox
 
 DEFAULT_TIMEOUT_S = 180.0
@@ -162,25 +163,27 @@ class ProcComm(Comm):
         spans = self._windows(len(payload))
         names = [channel] if len(spans) == 1 else \
             [f"{channel}w{i}" for i in range(len(spans))]
-        for ch, (a, b) in zip(names, spans):
-            out = self._out.get(ch)
-            if out is None:
-                out = self._out[ch] = Mailbox.for_writer(
-                    self._mbx_path(self.rank, succ, ch), b - a,
-                    self.timeout)
-            out.write(payload[a:b], self._epoch, self.lockstep)
-        parts = []
-        for ch, (a, b) in zip(names, spans):
-            inc = self._in.get(ch)
-            if inc is None:
-                inc = self._in[ch] = Mailbox.for_reader(
-                    self._mbx_path(pred, self.rank, ch), b - a,
-                    self.timeout)
-            got = inc.read(self.lockstep)
-            if got is None:            # free-run, producer not started yet
-                return warmup_like(tree)
-            parts.append(got[0])
-        return bytes_to_tree(b"".join(parts), tree)
+        with _span(f"exchange.{channel}", cat="wire", epoch=self._epoch,
+                   bytes=len(payload), windows=len(spans)):
+            for ch, (a, b) in zip(names, spans):
+                out = self._out.get(ch)
+                if out is None:
+                    out = self._out[ch] = Mailbox.for_writer(
+                        self._mbx_path(self.rank, succ, ch), b - a,
+                        self.timeout)
+                out.write(payload[a:b], self._epoch, self.lockstep)
+            parts = []
+            for ch, (a, b) in zip(names, spans):
+                inc = self._in.get(ch)
+                if inc is None:
+                    inc = self._in[ch] = Mailbox.for_reader(
+                        self._mbx_path(pred, self.rank, ch), b - a,
+                        self.timeout)
+                got = inc.read(self.lockstep)
+                if got is None:        # free-run, producer not started yet
+                    return warmup_like(tree)
+                parts.append(got[0])
+            return bytes_to_tree(b"".join(parts), tree)
 
     # -- Comm surface --------------------------------------------------------
 
@@ -219,6 +222,10 @@ class ProcComm(Comm):
     def pmean_all(self, tree):
         if self.n_ranks == 1:
             return tree
+        with _span("exchange.pmean", cat="wire", epoch=self._epoch):
+            return self._pmean_all(tree)
+
+    def _pmean_all(self, tree):
         payload = tree_to_bytes(tree)
         if self._board is None:
             self._board = Board.for_writer(

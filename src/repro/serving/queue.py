@@ -57,11 +57,13 @@ class Backpressure(RuntimeError):
 
 
 class BoundedRequestQueue:
-    def __init__(self, capacity: int, retry_after_s: float = 0.05):
+    def __init__(self, capacity: int, retry_after_s: float = 0.05,
+                 counters=None):
         if capacity < 1:
             raise ValueError(f"queue capacity must be >= 1, got {capacity}")
         self.capacity = capacity
         self.retry_after_s = retry_after_s
+        self.counters = counters       # optional obs.counters.Counters
         self._lanes: Dict[Hashable, deque] = {}
         self._lock = threading.Lock()
         self._size = 0
@@ -79,7 +81,15 @@ class BoundedRequestQueue:
         _trace("queue.submit", str(key))
         with self._lock:
             if self._size >= self.capacity:
+                # record the rejection HERE, inside the lock and before
+                # the raise below: a counter bumped after (or skipped on)
+                # the raise can undercount under adversarial
+                # interleavings — a reader parked at the 'queue.reject'
+                # hook must already see this rejection in every counter
+                # (ISSUE 10 satellite fix, audited in tests/test_obs.py)
                 self.stats["rejected"] += 1
+                if self.counters is not None:
+                    self.counters.inc("queue.rejected")
                 full = self._size
             else:
                 full = None
@@ -88,6 +98,8 @@ class BoundedRequestQueue:
                 self._seq += 1
                 self._size += 1
                 self.stats["admitted"] += 1
+                if self.counters is not None:
+                    self.counters.inc("queue.admitted")
         if full is not None:
             _trace("queue.reject", str(key))
             raise Backpressure(
@@ -115,6 +127,8 @@ class BoundedRequestQueue:
                 out.append(lane.popleft()[1])
                 self._size -= 1
             self.stats["drained"] += len(out)
+            if self.counters is not None and out:
+                self.counters.inc("queue.drained", len(out))
         _trace("queue.drain", str(key))
         return out
 

@@ -24,6 +24,7 @@ from __future__ import annotations
 
 import dataclasses
 import threading
+import time
 from typing import Dict, Optional, Tuple
 
 import numpy as np
@@ -33,6 +34,7 @@ import jax.numpy as jnp
 from .bucketing import bucket_for, pad_events, validate_buckets
 from .cache import CompileCache, jit_compile
 from .queue import Backpressure, BoundedRequestQueue
+from ..obs.counters import Counters
 from ..core import gan
 from ..core.workflow import SolveConfig, make_solver
 from ..problems import get_problem
@@ -79,6 +81,7 @@ class Ticket:
         self.problem = problem
         self.bucket = bucket
         self.n_events = n_events
+        self.t_submit = time.perf_counter()   # queue-inclusive latency base
         self._done = threading.Event()
         self._result: Optional[dict] = None
         self._error: Optional[BaseException] = None
@@ -147,8 +150,14 @@ class SolveService:
 
     def __init__(self, cfg: ServingConfig = ServingConfig()):
         self.cfg = cfg
+        self.counters = Counters()     # shared obs sink (ISSUE 10): the
+        #                                queue records admit/reject into it
+        #                                (inside its lock, so interleavings
+        #                                can't undercount) and `step`
+        #                                records per-bucket latencies
         self.queue = BoundedRequestQueue(cfg.queue_capacity,
-                                         cfg.retry_after_s)
+                                         cfg.retry_after_s,
+                                         counters=self.counters)
         self.cache = CompileCache(cfg.cache_capacity)
         self._problems: Dict[str, tuple] = {}   # name -> (problem, gen_stack)
         self.served = 0
@@ -249,8 +258,12 @@ class SolveService:
                 ys[i], mask[i] = py, pm
             out = fn(gen_stack, jnp.asarray(ys), jnp.asarray(mask))
             out = jax.tree.map(np.asarray, out)
+            now = time.perf_counter()
             for i, t in enumerate(tickets):
                 t.resolve({k: v[i] for k, v in out.items()})
+                # queue-inclusive request latency, bucketed per lane
+                self.counters.observe(f"{problem_name}/b{bucket}",
+                                      now - t.t_submit)
         except Exception as e:       # noqa: BLE001 — tickets must unblock
             for t in tickets:
                 t.fail(e)
@@ -275,3 +288,22 @@ class SolveService:
             "cache": dict(self.cache.stats),
             "warm": self.cache.keys(),
         }
+
+    def snapshot(self) -> dict:
+        """`stats()` plus derived serving counters (ISSUE 10): queue
+        depth, reject/retry-after rate, compile-cache hit ratio and the
+        per-(problem, bucket) queue-inclusive latency histograms.  The
+        snapshot is what `launch/serve.py --stats` prints."""
+        s = self.stats()
+        q, c = s["queue"], s["cache"]
+        submits = q["admitted"] + q["rejected"]
+        lookups = c["hits"] + c["misses"]
+        obs = self.counters.snapshot()
+        return dict(s, **{
+            "queue_depth": s["queued"],
+            "reject_rate": q["rejected"] / submits if submits else 0.0,
+            "retry_after_s": self.cfg.retry_after_s,
+            "cache_hit_rate": c["hits"] / lookups if lookups else 0.0,
+            "counters": obs["counters"],
+            "latency": obs["latency"],
+        })
